@@ -1,0 +1,146 @@
+"""Roofline analysis: read the dry-run JSONs and derive the three terms per
+(arch × shape × mesh) — EXPERIMENTS.md §Roofline is generated from this.
+
+Hardware model (TPU v5e, per assignment):
+    peak compute   197 TFLOP/s bf16 per chip
+    HBM bandwidth  819 GB/s per chip
+    ICI link       ~50 GB/s per link
+
+Terms (seconds, per device):
+    compute    = dot_flops / PEAK_FLOPS
+    memory     = dot_bytes / HBM_BW        (dot operand/output traffic proxy)
+    collective = collective_bytes / ICI_BW (per-device bytes over one link)
+
+MODEL_FLOPS (useful-work floor): 6·N·D for training, 2·N·D for prefill,
+2·N·B for one decode step (N = active params). The ratio
+MODEL_FLOPS / HLO dot FLOPs exposes remat + GSPMD-redundancy waste.
+"""
+from __future__ import annotations
+
+import functools
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+@functools.lru_cache(maxsize=None)
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts via eval_shape (no allocation)."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import get_model
+    cfg = get_arch(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(functools.partial(model.init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = active = 0.0
+    for path, leaf in flat:
+        keystr = jax.tree_util.keystr(path)
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if leaf.ndim >= 4 and "moe" in keystr:       # per-expert weights
+            active += n * cfg.top_k / max(cfg.n_experts, 1)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops_per_dev(arch: str, shape: dict, n_dev: int) -> float:
+    from repro.configs import SHAPES
+    shp = SHAPES[shape]
+    total, active = param_counts(arch)
+    # exclude embeddings from the matmul-work count? Keep them: lm_head is
+    # a real matmul; embed lookup is not. Approximation noted.
+    if shp.kind == "train":
+        toks = shp.global_batch * shp.seq_len
+        return 6.0 * active * toks / n_dev
+    if shp.kind == "prefill":
+        toks = shp.global_batch * shp.seq_len
+        return 2.0 * active * toks / n_dev
+    return 2.0 * active * shp.global_batch / n_dev    # decode: one token/seq
+
+
+def load_results(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        fname = os.path.basename(f)
+        want = f"_{mesh}{('_' + tag) if tag else ''}.json"
+        if not fname.endswith(want):
+            continue
+        if tag == "" and len(fname.replace(f"_{mesh}.json", "").split("_")) \
+                != len(f"{r['arch']}_{r['shape']}".split("_")):
+            continue
+        out.append(r)
+    return out
+
+
+def roofline_row(r: dict) -> dict | None:
+    if r["status"] != "ok":
+        return {"arch": r["arch"], "shape": r["shape"], "status": r["status"],
+                "reason": r.get("reason", r.get("error", ""))[:90]}
+    n_dev = r["n_devices"]
+    t_c = r["dot_flops"] / PEAK_FLOPS
+    t_m = r["dot_bytes"] / HBM_BW
+    coll = r["collectives"].get("total_bytes_tpu",
+                                r["collectives"]["total_bytes"])
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops_per_dev(r["arch"], r["shape"], n_dev)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "status": "ok",
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / r["dot_flops"] if r["dot_flops"] else 0.0,
+        "roofline_fraction": (
+            # fraction of peak the step would achieve, bounded by the
+            # dominant term: useful_flops_time / max(term)
+            (mf / PEAK_FLOPS) / max(t_c, t_m, t_x, 1e-12)),
+        "temp_gb": (r["memory"]["temp_bytes"] or 0) / 2**30,
+    }
+
+
+def table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = [roofline_row(r) for r in load_results(mesh, tag)]
+    hdr = (f"| arch | shape | compute s | memory s | collective s | "
+           f"dominant | useful ratio | roofline frac | temp GB/dev |\n"
+           f"|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for x in rows:
+        if x is None:
+            continue
+        if x["status"] != "ok":
+            lines.append(f"| {x['arch']} | {x['shape']} | — | — | — | "
+                         f"SKIP | — | — | — |")
+            continue
+        lines.append(
+            f"| {x['arch']} | {x['shape']} | {x['compute_s']:.3f} | "
+            f"{x['memory_s']:.3f} | {x['collective_s']:.3f} | "
+            f"**{x['dominant']}** | {x['useful_ratio']:.3f} | "
+            f"{x['roofline_fraction']:.4f} | {x['temp_gb']:.0f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    print("# single-pod (16x16)")
+    print(table("16x16"))
+    print()
+    print("# multi-pod (2x16x16)")
+    print(table("2x16x16"))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

@@ -1,0 +1,99 @@
+"""Benchmark runner — one entry per paper table/figure + framework metrics.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1        paper Table 1 (BERT-Tiny accuracy grid) — reduced epochs
+                here for CI speed; examples/reproduce_bert_tiny.py runs the
+                full version.
+  range_stats   paper §4 mechanism: per-cluster scale-factor gains
+  kernel        fused dequant-matmul micro (µs + deployed bytes)
+  quantize_cost preprocessing cost of SplitQuant itself (paper: one-off)
+  roofline      summary fractions from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def bench_table1():
+    from table1 import run_table1
+    t0 = time.perf_counter()
+    res = run_table1(epochs=2, n_samples=1500, verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6
+    for ds, row in res.items():
+        gap2 = row["int2_splitquant"] - row["int2_baseline"]
+        gap8 = row["int8_splitquant"] - row["int8_baseline"]
+        print(f"table1_{ds},{dt/2:.0f},"
+              f"fp32={row['fp32']:.3f};int2_gain={gap2:+.3f};"
+              f"int8_gain={gap8:+.3f}")
+        assert gap2 > gap8 - 1e-3, "INT2 gain should dominate INT8 gain"
+
+
+def bench_range_stats():
+    from range_stats import run
+    t0 = time.perf_counter()
+    _, med = run(verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"range_stats,{dt:.0f},median_scale_gain={med:.1f}x")
+
+
+def bench_kernel():
+    from kernel_bench import run
+    rows = run(verbose=False)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def bench_quantize_cost():
+    from repro.core import QuantConfig, QuantPolicy, quantize_tree
+    from repro.configs import get_arch
+    from repro.models import get_model
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, cfg)
+    t0 = time.perf_counter()
+    qp, rep = quantize_tree(key, params, QuantPolicy(cfg=QuantConfig(bits=2)))
+    jax.block_until_ready(jax.tree.leaves(qp)[0])
+    dt = (time.perf_counter() - t0) * 1e6
+    n = sum(l.size for l in jax.tree.leaves(params))
+    print(f"quantize_cost,{dt:.0f},{n/1e6:.1f}M_params;"
+          f"{rep['deployed_bytes']/rep['orig_bytes']:.3f}_size_ratio")
+
+
+def bench_roofline():
+    from roofline import load_results, roofline_row
+    for tag in ("", "opt"):
+        rows = [roofline_row(r) for r in load_results("16x16", tag)]
+        ok = [r for r in rows if r and r["status"] == "ok"]
+        label = tag or "baseline"
+        if not ok:
+            print(f"roofline_{label},0,no_dryrun_artifacts")
+            continue
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        best = max(ok, key=lambda r: r["roofline_fraction"])
+        import statistics
+        med = statistics.median(r["roofline_fraction"] for r in ok)
+        print(f"roofline_{label}_best,0,{best['arch']}x{best['shape']}="
+              f"{best['roofline_fraction']:.4f}")
+        print(f"roofline_{label}_median,0,{med:.4f}")
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.dirname(__file__))
+    print("name,us_per_call,derived")
+    bench_kernel()
+    bench_quantize_cost()
+    bench_range_stats()
+    bench_roofline()
+    bench_table1()
+
+
+if __name__ == "__main__":
+    main()

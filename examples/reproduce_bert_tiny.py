@@ -1,0 +1,24 @@
+"""Full paper Table 1 reproduction (BERT-Tiny × 2 datasets × INT2/4/8 ×
+{baseline, SplitQuant}). ~15 min on CPU.
+
+    PYTHONPATH=src python examples/reproduce_bert_tiny.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+from table1 import run_table1  # noqa: E402
+
+if __name__ == "__main__":
+    results = run_table1(epochs=8, n_samples=4000)
+    print("\n== markdown (paper Table 1 structure) ==")
+    print("| dataset | FP32 | INT2 base | INT2 SQ | diff | INT4 base | "
+          "INT4 SQ | diff | INT8 base | INT8 SQ | diff |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for ds, r in results.items():
+        cells = [f"{r['fp32']:.1%}"]
+        for b in (2, 4, 8):
+            base, sq = r[f"int{b}_baseline"], r[f"int{b}_splitquant"]
+            cells += [f"{base:.1%}", f"{sq:.1%}", f"{100*(sq-base):+.1f}%p"]
+        print(f"| {ds} | " + " | ".join(cells) + " |")

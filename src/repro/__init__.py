@@ -1,0 +1,4 @@
+"""repro: SplitQuant — layer splitting for low-bit quantization, as a
+production JAX/TPU training + quantized-serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+"""Architecture configs. Importing this package populates the registry."""
+from .base import ArchConfig, ShapeConfig, SHAPES, cell_is_runnable
+from .registry import REGISTRY, all_archs, get_arch
+
+# register all assigned architectures (+ the paper's own BERT-Tiny)
+from . import (  # noqa: F401
+    mistral_large_123b, chatglm3_6b, llama3_405b, stablelm_1_6b,
+    moonshot_v1_16b_a3b, kimi_k2_1t_a32b, paligemma_3b, whisper_tiny,
+    rwkv6_3b, recurrentgemma_9b, bert_tiny,
+)
+
+ASSIGNED = [
+    "mistral-large-123b", "chatglm3-6b", "llama3-405b", "stablelm-1.6b",
+    "moonshot-v1-16b-a3b", "kimi-k2-1t-a32b", "paligemma-3b", "whisper-tiny",
+    "rwkv6-3b", "recurrentgemma-9b",
+]
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "cell_is_runnable",
+           "REGISTRY", "all_archs", "get_arch", "ASSIGNED"]

@@ -1,0 +1,120 @@
+"""Architecture configuration schema + the shape grid assigned to this paper."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | vlm | audio | ssm | hybrid | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    first_k_dense: int = 0           # leading dense layers (DeepSeek-style)
+    dense_d_ff: int = 0              # ffn width of those dense layers
+    capacity_factor: float = 1.25
+
+    # --- attention / positional ---
+    rope_variant: str = "full"       # full | half (GLM 2d-RoPE) | none | learned
+    rope_theta: float = 1e4
+    window: Optional[int] = None     # local-attention window (None = global)
+    head_dim_override: int = 0
+
+    # --- ffn ---
+    ffn_type: str = "swiglu"         # swiglu | geglu | gelu
+
+    # --- hybrid (Griffin / RecurrentGemma) ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    conv_width: int = 4
+    lru_width: int = 0               # RG-LRU recurrent width (0 ⇒ d_model)
+
+    # --- ssm (RWKV6) ---
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder (Whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 1500              # audio frames after the conv stub
+
+    # --- modality frontend stubs (vlm / audio) ---
+    stub_frontend: bool = False
+    n_prefix_embeds: int = 0         # vlm: image patch tokens prepended
+
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm_type: str = "rms"           # rms | layer
+    param_dtype: str = "bfloat16"
+    bias: bool = False               # linear biases (BERT/whisper style)
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        if self.head_dim_override:
+            return self.head_dim_override
+        return self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing ⇒ long_500k cell runs."""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 2 * max(1, len(self.block_pattern) or 1)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads else 0,
+            d_ff=256,
+            dense_d_ff=256 if self.dense_d_ff else 0,
+            vocab=512,
+            n_experts=min(self.n_experts, 8),
+            top_k=min(self.top_k, 2),
+            first_k_dense=min(self.first_k_dense, 1),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_seq=32,
+            n_prefix_embeds=min(self.n_prefix_embeds, 8),
+            lru_width=128 if self.lru_width else 0,
+            head_dim_override=32 if self.head_dim_override else 0,
+            rwkv_head_dim=32,
+            window=min(self.window, 16) if self.window else None,
+            param_dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (DESIGN.md §5)")
+    return True, ""

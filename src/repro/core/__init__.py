@@ -1,0 +1,19 @@
+"""SplitQuant core: the paper's contribution as composable JAX transforms."""
+from .quantize import QuantConfig, fake_quant, qparams, quantize, dequantize, value_range
+from .kmeans import kmeans_1d, KMeansResult
+from .splitquant import (
+    SplitQuantTensor,
+    splitquant_tensor,
+    baseline_quant_tensor,
+    split_activation_fake_quant,
+    effective_scales,
+)
+from .apply import QuantPolicy, quantize_tree, dequantize_tree, DEFAULT_EXCLUDE
+
+__all__ = [
+    "QuantConfig", "fake_quant", "qparams", "quantize", "dequantize",
+    "value_range", "kmeans_1d", "KMeansResult", "SplitQuantTensor",
+    "splitquant_tensor", "baseline_quant_tensor", "split_activation_fake_quant",
+    "effective_scales", "QuantPolicy", "quantize_tree", "dequantize_tree",
+    "DEFAULT_EXCLUDE",
+]

@@ -1,0 +1,151 @@
+"""Model-level SplitQuant application: walk a parameter pytree, replace
+quantizable weight leaves with :class:`SplitQuantTensor`s.
+
+Paper §4.1 rules honored:
+  * normalization γ/β are "semantically not weights" → never quantized;
+  * gate/decay parameters of recurrent layers (RWKV decay, RG-LRU gates)
+    are treated the same way;
+  * biases are clustered+quantized like weights (1-D);
+  * batch-norm folding is a no-op for the archs here (none use BN), but the
+    hook exists for conv frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QuantConfig
+from .splitquant import SplitQuantTensor, baseline_quant_tensor, splitquant_tensor
+
+#: parameter-path fragments that are never quantized (semantically not weights)
+DEFAULT_EXCLUDE = (
+    "norm", "ln_", "layernorm", "rmsnorm", "scale_param",
+    "decay", "gate_a", "rg_lru", "time_", "alibi", "rope",
+    # MoE routers stay fp32: top-k selection flips discretely under
+    # quantization noise, destroying accuracy for ~0 memory savings
+    "router",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """What to quantize and how."""
+
+    cfg: QuantConfig = QuantConfig(bits=8)
+    method: str = "splitquant"          # "splitquant" | "baseline" | "percentile"
+    k: int = 3                          # number of split layers (paper: 3)
+    quantize_biases: bool = True        # paper quantizes biases too
+    quantize_embeddings: bool = False
+    min_size: int = 64                  # leave tiny params alone
+    exclude: tuple = DEFAULT_EXCLUDE
+    act_chunks: int = 3                 # §4.2 activation split (0/1 disables)
+    sample_size: int = 1 << 18
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts).lower()
+
+
+#: path fragments marking stacked (scan-over-layers) parameter groups
+STACK_FRAGMENTS = ("layers", "moe_layers", "groups", "tail",
+                   "enc_layers", "dec_layers")
+
+
+def infer_stack_dims(path_s: str, leaf) -> int:
+    """Leading axes quantized independently: 1 under a layer stack, 2 for
+    per-expert MoE weights (L, E, d, f) — DESIGN.md §5 (per-expert
+    clustering)."""
+    in_stack = any(f"/{f}/" in f"/{path_s}/" or path_s.startswith(f + "/")
+                   for f in STACK_FRAGMENTS)
+    if not in_stack:
+        return 0
+    if leaf.ndim >= 4:
+        return 2
+    return 1
+
+
+def _quantizable(path_s: str, leaf, policy: QuantPolicy) -> bool:
+    if not isinstance(leaf, jnp.ndarray) or not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    if leaf.size < policy.min_size:
+        return False
+    if any(frag in path_s for frag in policy.exclude):
+        return False
+    is_table = any(f in path_s for f in ("embed", "pos_table", "enc_pos",
+                                         "dec_pos"))
+    if is_table and not policy.quantize_embeddings:
+        return False
+    if leaf.ndim == 0:
+        return False
+    sd = infer_stack_dims(path_s, leaf)
+    if leaf.ndim - sd < 1:
+        return False
+    if leaf.ndim - sd == 1 and not policy.quantize_biases:
+        return False
+    return True
+
+
+def quantize_tree(key: jax.Array, params, policy: QuantPolicy,
+                  is_quantizable: Optional[Callable] = None):
+    """Return a copy of ``params`` with quantizable leaves replaced by
+    SplitQuantTensors (method-dependent), plus a report dict.
+
+    * ``splitquant``  — k-means split, per-cluster scales (the paper).
+    * ``baseline``    — one scale set from full min/max range.
+    * ``percentile``  — one scale set from the clipped range (de-facto
+                        outlier treatment the paper argues against).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    report = {"quantized": [], "skipped": [], "deployed_bytes": 0,
+              "orig_bytes": 0}
+    out_leaves = []
+    keys = jax.random.split(key, max(len(flat), 1))
+    for (path, leaf), k_i in zip(flat, keys):
+        path_s = _path_str(path)
+        ok = (is_quantizable or _quantizable)(path_s, leaf, policy)
+        if not ok:
+            out_leaves.append(leaf)
+            report["skipped"].append(path_s)
+            continue
+        sd = infer_stack_dims(path_s, leaf)
+        if policy.method == "splitquant":
+            sq = splitquant_tensor(k_i, leaf, policy.cfg, k=policy.k,
+                                   sample_size=policy.sample_size,
+                                   stack_dims=sd)
+        elif policy.method == "baseline":
+            cfg = dataclasses.replace(policy.cfg, percentile=None)
+            sq = baseline_quant_tensor(leaf, cfg, stack_dims=sd)
+        elif policy.method == "percentile":
+            cfg = policy.cfg if policy.cfg.percentile else dataclasses.replace(
+                policy.cfg, percentile=0.99)
+            sq = baseline_quant_tensor(leaf, cfg, stack_dims=sd)
+        else:
+            raise ValueError(f"unknown method {policy.method!r}")
+        out_leaves.append(sq)
+        report["quantized"].append(path_s)
+        report["deployed_bytes"] += sq.nbytes_deployed()
+        report["orig_bytes"] += leaf.size * 4
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), report
+
+
+def dequantize_tree(params):
+    """Replace every SplitQuantTensor leaf with its dequantized dense array
+    (simulated-quantization evaluation path)."""
+    return jax.tree_util.tree_map(
+        lambda l: l.dequantize() if isinstance(l, SplitQuantTensor) else l,
+        params, is_leaf=lambda l: isinstance(l, SplitQuantTensor))

@@ -1,0 +1,88 @@
+"""1-D k-means with greedy k-means++ initialization (paper §4.1).
+
+SplitQuant clusters the scalar values of a weight/bias tensor into k=3
+(lower / middle / upper) clusters. Values are 1-D here by construction
+(we cluster the flattened tensor), which keeps everything exact and cheap:
+distance is (x - c)^2 and Lloyd iterations are segment means.
+
+Greedy k-means++ (Grunau et al., SODA 2023 — the paper's [6]): each new
+center is chosen from ℓ candidate samples drawn ∝ D²(x), keeping the
+candidate that minimizes the total cost. With a fixed PRNG key the whole
+procedure is deterministic and jit-compatible (static k, ℓ, iters).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansResult(NamedTuple):
+    centroids: jnp.ndarray    # (k,) sorted ascending
+    assignments: jnp.ndarray  # (n,) int32 in [0, k)
+    cost: jnp.ndarray         # scalar: sum of squared distances
+
+
+def _dist2(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """(n, m) squared distances between 1-D points and m centers."""
+    return (x[:, None] - centers[None, :]) ** 2
+
+
+def _greedy_kmeanspp_init(key: jax.Array, x: jnp.ndarray, k: int,
+                          num_candidates: int) -> jnp.ndarray:
+    """Greedy k-means++ seeding over 1-D points ``x`` (n,)."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, n)]
+    centers = jnp.full((k,), first, dtype=x.dtype)
+    # squared distance to the nearest chosen center so far
+    d2 = (x - first) ** 2
+
+    def pick_one(carry, key_i):
+        centers, d2, i = carry
+        # sample ℓ candidates ∝ D²; guard the all-zero case (all points equal)
+        total = jnp.sum(d2)
+        logits = jnp.where(total > 0, jnp.log(jnp.maximum(d2, 1e-30)), jnp.zeros_like(d2))
+        idx = jax.random.categorical(key_i, logits, shape=(num_candidates,))
+        cand = x[idx]                                        # (ℓ,)
+        # cost if candidate j were added = Σ min(d2, (x-cand_j)²)
+        cand_d2 = _dist2(x, cand)                            # (n, ℓ)
+        new_cost = jnp.sum(jnp.minimum(d2[:, None], cand_d2), axis=0)  # (ℓ,)
+        best = jnp.argmin(new_cost)
+        chosen = cand[best]
+        centers = centers.at[i].set(chosen)
+        d2 = jnp.minimum(d2, (x - chosen) ** 2)
+        return (centers, d2, i + 1), None
+
+    keys = jax.random.split(key, k - 1)
+    (centers, _, _), _ = jax.lax.scan(pick_one, (centers, d2, 1), keys)
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "num_candidates"))
+def kmeans_1d(key: jax.Array, x: jnp.ndarray, k: int = 3, iters: int = 25,
+              num_candidates: int = 4) -> KMeansResult:
+    """Lloyd's algorithm on 1-D data with greedy k-means++ init.
+
+    Returns centroids sorted ascending (lower/middle/upper for k=3) and the
+    matching assignments. Empty clusters keep their previous centroid.
+    """
+    x = x.reshape(-1).astype(jnp.float32)
+    centers = _greedy_kmeanspp_init(key, x, k, num_candidates)
+
+    def lloyd(centers, _):
+        assign = jnp.argmin(_dist2(x, centers), axis=1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)   # (n, k)
+        counts = one_hot.sum(axis=0)
+        sums = one_hot.T @ x
+        new_centers = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), centers)
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(lloyd, centers, None, length=iters)
+    order = jnp.argsort(centers)
+    centers = centers[order]
+    assign = jnp.argmin(_dist2(x, centers), axis=1).astype(jnp.int32)
+    cost = jnp.sum(jnp.min(_dist2(x, centers), axis=1))
+    return KMeansResult(centers, assign, cost)

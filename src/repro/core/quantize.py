@@ -1,0 +1,131 @@
+"""Uniform affine quantization (paper §3).
+
+Q(x)  = INT(S·x) + Z                      (eq. 1)
+S     = (2^b - 1) / (α - β)               (eq. 2)
+Z     = -2^(b-1) - INT(S·β)               (eq. 3)
+x̂     = (Q(x) - Z) / S                    (eq. 4-6)
+
+``b`` is the bit-width; codes live in [-2^(b-1), 2^(b-1) - 1].
+Symmetric quantization is the special case α = -β ⇒ Z = 0.
+
+All functions are pure jnp and jit/vmap-safe. Ranges may carry leading
+"group" axes (per-channel / per-cluster quantization): ``beta``/``alpha``
+broadcast against ``x``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of a uniform quantizer."""
+
+    bits: int = 8
+    symmetric: bool = False
+    #: keep values within this percentile when computing the range
+    #: (paper §1: "often 99% is used in practice"). None = min/max (no clip).
+    percentile: Optional[float] = None
+    #: quantize per output channel (axis 0 groups) instead of per tensor.
+    #: Beyond-paper option; the paper uses per-tensor scales per split layer.
+    per_channel: bool = False
+
+    def __post_init__(self):
+        if not (2 <= self.bits <= 8):
+            raise ValueError(f"bits must be in [2, 8], got {self.bits}")
+        if self.percentile is not None and not (0.5 < self.percentile <= 1.0):
+            raise ValueError(f"percentile must be in (0.5, 1], got {self.percentile}")
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def levels(self) -> int:
+        return 2**self.bits
+
+
+def value_range(x: jnp.ndarray, percentile: Optional[float] = None,
+                axis=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(β, α) of ``x``; optionally the symmetric percentile range."""
+    x = x.astype(jnp.float32)
+    if percentile is None:
+        beta = jnp.min(x, axis=axis)
+        alpha = jnp.max(x, axis=axis)
+    else:
+        lo = (1.0 - percentile) * 100.0
+        hi = percentile * 100.0
+        beta = jnp.percentile(x, lo, axis=axis)
+        alpha = jnp.percentile(x, hi, axis=axis)
+    return beta, alpha
+
+
+def qparams(beta: jnp.ndarray, alpha: jnp.ndarray, cfg: QuantConfig
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale S and zero-point Z per eqs. (2)-(3).
+
+    Degenerate ranges (α == β, e.g. an all-zero or single-valued cluster)
+    get S = 1 so quantize/dequantize stay finite.
+    """
+    beta = jnp.asarray(beta, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if cfg.symmetric:
+        amax = jnp.maximum(jnp.abs(beta), jnp.abs(alpha))
+        beta, alpha = -amax, amax
+    span = alpha - beta
+    # Degenerate range (all-equal cluster): pick S = 1/|v| so the single
+    # value v maps to code ±1 and dequantizes EXACTLY (rint(S·v)/S = v).
+    amax = jnp.maximum(jnp.abs(beta), jnp.abs(alpha))
+    degenerate_scale = jnp.where(amax > 0, 1.0 / jnp.where(amax > 0, amax, 1.0), 1.0)
+    scale = jnp.where(span > 0,
+                      (cfg.levels - 1) / jnp.where(span > 0, span, 1.0),
+                      degenerate_scale)
+    if cfg.symmetric:
+        zero = jnp.zeros_like(scale)
+    else:
+        zero = -(2 ** (cfg.bits - 1)) - jnp.rint(scale * beta)
+    return scale, zero
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+             cfg: QuantConfig) -> jnp.ndarray:
+    """x → int8 codes in [qmin, qmax] (eq. 1, clipped to the code range)."""
+    q = jnp.rint(scale * x.astype(jnp.float32)) + zero
+    return jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Codes → x̂ per eq. (4)."""
+    return ((q.astype(jnp.float32) - zero) / scale).astype(dtype)
+
+
+def fake_quant(x: jnp.ndarray, cfg: QuantConfig, axis=None) -> jnp.ndarray:
+    """Simulated quantization: dequantize(quantize(x)) with ranges from x.
+
+    ``axis``: reduction axes for the range (None = per-tensor). For
+    per-channel weights pass ``axis=tuple(range(1, x.ndim))`` and keep dims.
+    """
+    if axis is None and cfg.per_channel and x.ndim >= 2:
+        axis = tuple(range(1, x.ndim))
+    if axis is not None:
+        beta, alpha = value_range(x, cfg.percentile, axis=axis)
+        beta = jnp.expand_dims(beta, axis)
+        alpha = jnp.expand_dims(alpha, axis)
+    else:
+        beta, alpha = value_range(x, cfg.percentile)
+    scale, zero = qparams(beta, alpha, cfg)
+    return dequantize(quantize(x, scale, zero, cfg), scale, zero, x.dtype)
+
+
+def quant_error(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Mean squared quantization error of the per-tensor quantizer on x."""
+    return jnp.mean((x - fake_quant(x, cfg)) ** 2)

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, synthetic_lm_batch, Prefetcher
+from . import classification

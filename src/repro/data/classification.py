@@ -1,0 +1,78 @@
+"""Synthetic text-classification datasets for the paper's Table 1 repro.
+
+The paper uses DAIR.AI emotion (6-way) and UCI SMS spam (2-way). Both are
+unavailable offline, so we generate token-sequence classification tasks of
+matched structure: class-conditional keyword distributions over a WordPiece-
+sized vocab with a common background distribution — the same shape of
+problem BERT-Tiny solves (a few discriminative tokens amid filler).
+
+Difficulty is controlled by keyword rate/overlap so that a fine-tuned
+BERT-Tiny lands in the paper's accuracy regime (~90% for the 6-way task,
+~98% for the binary task).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ClsDataset:
+    name: str
+    n_classes: int
+    seq_len: int
+    tokens: np.ndarray     # (N, S) int32
+    labels: np.ndarray     # (N,)  int32
+    mask: np.ndarray       # (N, S) int32
+
+
+def _make(name: str, n_classes: int, n_samples: int, seq_len: int,
+          vocab: int, keyword_rate: float, n_keywords: int,
+          noise: float, seed: int) -> ClsDataset:
+    rng = np.random.default_rng(seed)
+    # per-class keyword vocab (disjoint), shared background band
+    kw = rng.choice(np.arange(1000, vocab), size=(n_classes, n_keywords),
+                    replace=False)
+    N, S = n_samples, seq_len
+    labels = rng.integers(0, n_classes, size=N)
+    lengths = rng.integers(S // 4, S, size=N)
+    toks = rng.integers(100, 1000, size=(N, S))            # background band
+    for i in range(N):
+        L = lengths[i]
+        n_kw = max(1, int(keyword_rate * L))
+        pos = rng.choice(np.arange(1, L), size=min(n_kw, L - 1),
+                         replace=False)
+        cls = labels[i]
+        # label noise: sometimes plant another class's keywords
+        eff = cls if rng.random() > noise else rng.integers(0, n_classes)
+        toks[i, pos] = rng.choice(kw[eff], size=len(pos))
+        toks[i, L:] = 0                                     # pad
+    toks[:, 0] = 101                                        # [CLS]
+    mask = (toks != 0).astype(np.int32)
+    return ClsDataset(name, n_classes, S, toks.astype(np.int32),
+                      labels.astype(np.int32), mask)
+
+
+def emotion_like(n_samples=4000, seq_len=64, vocab=30522, seed=0):
+    """6-way, harder task → FP32 accuracy ≈ 0.90 (paper: 90.2%)."""
+    return _make("emotion", 6, n_samples, seq_len, vocab,
+                 keyword_rate=0.12, n_keywords=24, noise=0.08, seed=seed)
+
+
+def spam_like(n_samples=4000, seq_len=64, vocab=30522, seed=1):
+    """binary, easier task → FP32 accuracy ≈ 0.98 (paper: 98.4%)."""
+    return _make("spam", 2, n_samples, seq_len, vocab,
+                 keyword_rate=0.12, n_keywords=60, noise=0.035, seed=seed)
+
+
+def batches(ds: ClsDataset, batch_size: int, *, seed=0, train=True,
+            epochs=1):
+    rng = np.random.default_rng(seed)
+    N = ds.tokens.shape[0]
+    for _ in range(epochs):
+        idx = rng.permutation(N) if train else np.arange(N)
+        for i in range(0, N - batch_size + 1, batch_size):
+            j = idx[i:i + batch_size]
+            yield {"tokens": ds.tokens[j], "labels": ds.labels[j],
+                   "mask": ds.mask[j]}

@@ -1,0 +1,87 @@
+"""Deterministic, restart-safe data pipeline.
+
+Design for 1000+ nodes: the pipeline is STATELESS — batch contents are a
+pure function of (seed, step, shard), so checkpoint/restart needs only the
+step counter (no data-iterator state), and elastic re-sharding is just a
+different (shard, n_shards) mapping over the same index space. A background
+thread prefetches ahead of the training loop.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "lm"          # lm | classification
+
+
+def synthetic_lm_batch(cfg: DataConfig, step: int, shard: int = 0,
+                       n_shards: int = 1) -> dict:
+    """Markov-chain-ish synthetic token stream: learnable structure (next
+    token depends on current) so loss decreases measurably during tests.
+
+    Pure function of (seed, step, shard) — restart-safe by construction.
+    """
+    per_shard = cfg.global_batch // n_shards
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, shard]))
+    B, S, V = per_shard, cfg.seq_len, cfg.vocab
+    # structured stream: x_{t+1} = (a*x_t + drift) mod V with noise
+    a = 31
+    x0 = rng.integers(0, V, size=(B, 1))
+    drift = rng.integers(0, 7, size=(B, 1))
+    toks = np.empty((B, S + 1), np.int64)
+    toks[:, :1] = x0
+    for t in range(S):
+        nxt = (a * toks[:, t:t + 1] + drift) % V
+        noise = rng.random((B, 1)) < 0.1
+        rand = rng.integers(0, V, size=(B, 1))
+        toks[:, t + 1:t + 2] = np.where(noise, rand, nxt)
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+class Prefetcher:
+    """Runs `make_batch(step)` in a background thread, `depth` batches
+    ahead. `get(step)` returns batches strictly in order."""
+
+    def __init__(self, make_batch, start_step: int, depth: int = 2):
+        self._make = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._next_to_produce = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while not self._stop.is_set():
+            step = self._next_to_produce
+            batch = self._make(step)
+            self._q.put((step, batch))
+            self._next_to_produce = step + 1
+
+    def get(self, step: int):
+        while True:
+            s, b = self._q.get()
+            if s == step:
+                return b
+            # stale batch from before a restart — drop it
+
+    def stop(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused activation SPLIT-quantization (paper §4.2).
+
+At serving time activations are quantized dynamically: the vector of
+length n is split into ``n_chunks`` chunks, each quantized with its own
+runtime (β, α). Unfused, this is 2 passes over the activation in HBM
+(min/max reduce, then scale). The kernel fuses both into one VMEM-resident
+pass per (row-block × chunk): ranges never leave VMEM, and the int8 codes
++ per-(row, chunk) scale/zero stream out at ¼ the bf16 bytes.
+
+Grid: (rows / block_r, n_chunks). Each program owns a (block_r, chunk)
+tile: reduce β/α over the chunk width, derive (S, Z) per row, emit codes.
+Per-ROW ranges (finer than the paper's per-tensor-per-chunk — rows are
+independent tokens, so this is strictly better and free on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, scale_ref, zero_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                 # (br, cw)
+    beta = jnp.min(x, axis=-1, keepdims=True)
+    alpha = jnp.max(x, axis=-1, keepdims=True)
+    span = alpha - beta
+    levels = float(2 ** bits - 1)
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.maximum(jnp.abs(beta), jnp.abs(alpha))
+    degenerate = jnp.where(amax > 0, 1.0 / jnp.where(amax > 0, amax, 1.0),
+                           1.0)
+    scale = jnp.where(span > 0, levels / jnp.where(span > 0, span, 1.0),
+                      degenerate)
+    zero = jnp.where(span > 0, -(2.0 ** (bits - 1)) - jnp.rint(scale * beta),
+                     0.0)
+    q = jnp.clip(jnp.rint(scale * x) + zero, qmin, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_chunks", "block_r",
+                                             "interpret"))
+def act_split_quantize(x: jnp.ndarray, *, bits: int = 8, n_chunks: int = 3,
+                       block_r: int = 256, interpret: bool = False):
+    """x: (R, N) → (q int8 (R, N), scale (R, n_chunks), zero (R, n_chunks)).
+
+    N must divide by n_chunks; R by block_r (callers pad — see ops).
+    """
+    R, N = x.shape
+    assert N % n_chunks == 0 and R % block_r == 0, (x.shape, n_chunks,
+                                                    block_r)
+    cw = N // n_chunks
+    grid = (R // block_r, n_chunks)
+    kernel = functools.partial(_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, cw), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_r, cw), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, N), jnp.int8),
+            jax.ShapeDtypeStruct((R, n_chunks), jnp.float32),
+            jax.ShapeDtypeStruct((R, n_chunks), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def act_split_quantize_ref(x: jnp.ndarray, *, bits: int = 8,
+                           n_chunks: int = 3):
+    """Pure-jnp oracle (per-row per-chunk ranges, eqs. 1-3)."""
+    from repro.core.quantize import QuantConfig, qparams, quantize
+    R, N = x.shape
+    cfg = QuantConfig(bits=bits)
+    xc = x.reshape(R, n_chunks, N // n_chunks).astype(jnp.float32)
+    beta = jnp.min(xc, axis=-1)
+    alpha = jnp.max(xc, axis=-1)
+    scale, zero = qparams(beta, alpha, cfg)            # (R, n_chunks)
+    q = quantize(xc, scale[..., None], zero[..., None], cfg)
+    return q.reshape(R, N), scale, zero
+
+
+def dequantize_act(q, scale, zero, dtype=jnp.float32):
+    R, N = q.shape
+    n_chunks = scale.shape[-1]
+    qc = q.reshape(R, n_chunks, N // n_chunks).astype(jnp.float32)
+    x = (qc - zero[..., None]) / scale[..., None]
+    return x.reshape(R, N).astype(dtype)

@@ -1,0 +1,65 @@
+"""Bit-packing for low-bit codes and cluster ids.
+
+Codes are packed along axis 0 (the contraction axis K of a (K, N) weight),
+``8 // bits`` codes per uint8 byte:
+
+    byte[i, n] = Σ_p  u[i*per + p, n] << (bits * p)
+
+where ``u = q - qmin`` is the unsigned code. Packing along K keeps a
+(block_k, block_n) VMEM tile contiguous in the packed layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_codes(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(K, N) int8 signed codes → (K*bits/8, N) uint8 packed."""
+    if bits == 8:
+        return (q.astype(jnp.int16) + 128).astype(jnp.uint8)
+    per = 8 // bits
+    K = q.shape[0]
+    assert K % per == 0, f"K={K} not divisible by {per} (bits={bits})"
+    qmin = -(2 ** (bits - 1))
+    u = (q.astype(jnp.int32) - qmin).astype(jnp.uint32)          # [0, 2^bits)
+    u = u.reshape(K // per, per, *q.shape[1:])
+    byte = jnp.zeros(u.shape[0:1] + u.shape[2:], jnp.uint32)
+    for p in range(per):
+        byte = byte | (u[:, p] << (bits * p))
+    return byte.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(K*bits/8, N) uint8 → (K, N) int8 signed codes. jnp-only; safe to call
+    inside a Pallas kernel body."""
+    if bits == 8:
+        return (packed.astype(jnp.int16) - 128).astype(jnp.int8)
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    qmin = -(2 ** (bits - 1))
+    b = packed.astype(jnp.int32)
+    parts = [((b >> (bits * p)) & mask) for p in range(per)]     # each (Kp, N)
+    u = jnp.stack(parts, axis=1)                                 # (Kp, per, N)
+    u = u.reshape(packed.shape[0] * per, *packed.shape[1:])
+    return (u + qmin).astype(jnp.int8)
+
+
+def pack_cids(cid: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) uint8 cluster ids (< 4) → (K/4, N) uint8, 2 bits each."""
+    per, bits = 4, 2
+    K = cid.shape[0]
+    assert K % per == 0
+    u = cid.astype(jnp.uint32).reshape(K // per, per, *cid.shape[1:])
+    byte = jnp.zeros(u.shape[0:1] + u.shape[2:], jnp.uint32)
+    for p in range(per):
+        byte = byte | (u[:, p] << (bits * p))
+    return byte.astype(jnp.uint8)
+
+
+def unpack_cids(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_cids`. jnp-only."""
+    per, bits, mask = 4, 2, 3
+    b = packed.astype(jnp.int32)
+    parts = [((b >> (bits * p)) & mask) for p in range(per)]
+    u = jnp.stack(parts, axis=1)
+    return u.reshape(packed.shape[0] * per, *packed.shape[1:]).astype(jnp.uint8)

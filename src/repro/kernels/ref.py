@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused SplitQuant dequant-matmul.
+
+Two mathematically identical formulations:
+
+  * :func:`splitquant_matmul_ref` — the fused form the TPU kernel computes
+    (per-element cluster-indexed dequant, one dense matmul);
+  * :func:`splitquant_matmul_paper` — the paper's literal form (k split
+    layers, partial outputs summed). Used by tests to prove the kernel
+    computes exactly the paper's function.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .packing import unpack_cids, unpack_codes
+
+
+def dequant_weight_ref(q_packed: jnp.ndarray, cid_packed: jnp.ndarray,
+                       recip: jnp.ndarray, shift: jnp.ndarray,
+                       bits: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Ŵ[k, n] = q[k, n] * recip[cid[k, n], n] + shift[cid[k, n], n].
+
+    ``recip = 1/scale`` and ``shift = -zero/scale`` are the host-precomputed
+    affine dequant constants, shape (k, N).
+    """
+    q = unpack_codes(q_packed, bits).astype(jnp.float32)          # (K, N)
+    cid = unpack_cids(cid_packed)                                 # (K, N)
+    n_idx = jnp.arange(q.shape[1])
+    w = q * recip[cid, n_idx] + shift[cid, n_idx]
+    return w.astype(dtype)
+
+
+def splitquant_matmul_ref(x: jnp.ndarray, q_packed: jnp.ndarray,
+                          cid_packed: jnp.ndarray, recip: jnp.ndarray,
+                          shift: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fused form: y = x · Ŵ, accumulated in fp32."""
+    w = dequant_weight_ref(q_packed, cid_packed, recip, shift, bits,
+                           dtype=x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def splitquant_matmul_paper(x: jnp.ndarray, q_packed: jnp.ndarray,
+                            cid_packed: jnp.ndarray, recip: jnp.ndarray,
+                            shift: jnp.ndarray, bits: int,
+                            k: int = 3) -> jnp.ndarray:
+    """Paper's 3-layer form: y = Σ_c x · (Ŵ ⊙ [cid == c])."""
+    w = dequant_weight_ref(q_packed, cid_packed, recip, shift, bits,
+                           dtype=x.dtype)
+    cid = unpack_cids(cid_packed)
+    y = jnp.zeros((*x.shape[:-1], w.shape[1]), jnp.float32)
+    for c in range(k):
+        w_c = jnp.where(cid == c, w, 0).astype(x.dtype)
+        y = y + jnp.dot(x, w_c, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: chunked RWKV6 WKV (data-dependent-decay linear
+attention — the TPU-native adaptation of RWKV-LM's CUDA kernel).
+
+Recurrence (per head; key dim i, value dim j):
+    S_t[i,j] = w_t[i]·S_{t-1}[i,j] + k_t[i]·v_t[j]
+    y_t[j]   = Σ_i r_t[i]·(S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+
+A step-by-step scan is latency-bound on TPU (4096 sequential VPU steps).
+The chunked form (GLA-style) turns it into MXU work: with chunk length L
+and in-chunk log-decays c[t] = Σ_{s≤t} log w_s (so c ≤ 0, monotone ↓):
+
+    intra:  att[t,s] = Σ_i r_t[i]·k_s[i]·exp(c[t-1,i] − c[s,i])   (s < t)
+            att[t,t] = Σ_i r_t[i]·u[i]·k_t[i]
+    inter:  y += (r ⊙ exp(c_prev)) @ S_in
+    carry:  S_out = diag(exp(c[L−1]))·S_in + (k ⊙ exp(c[L−1] − c))ᵀ @ v
+
+Every exponent is ≤ 0 (differences of a decreasing cumsum within the
+chunk), so the chunked form needs NO clamping — the key numerical property
+that makes this port exact. The (L, L, K) pairwise-decay tensor stays tiny
+(L=16, K=64 → 64 KiB) and lives entirely in VMEM; the state S (K, V) is a
+VMEM scratch carried across the sequential chunk grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *,
+            n_chunks: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (L, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (L, V)
+    w = w_ref[0].astype(jnp.float32)          # (L, K) decay ∈ (0, 1)
+    u = u_ref[0].astype(jnp.float32)          # (1, K)
+    L = r.shape[0]
+
+    lw = jnp.log(jnp.maximum(w, 1e-30))
+    c = jnp.cumsum(lw, axis=0)                # inclusive, ≤ 0, decreasing
+    cp = c - lw                               # exclusive (c[t-1], c[-1]=0)
+
+    # intra-chunk attention, all exponents ≤ 0
+    D = cp[:, None, :] - c[None, :, :]        # (L, L, K)
+    mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+    E = jnp.where(mask[:, :, None], jnp.exp(D), 0.0)
+    att = jnp.einsum("tk,sk,tsk->ts", r, k, E)
+    att = att + jnp.eye(L) * jnp.sum(r * u * k, axis=-1)[:, None]
+
+    s_in = s_ref[...]                          # (K, V)
+    y = att @ v + (r * jnp.exp(cp)) @ s_in
+    decay_out = jnp.exp(c[-1])                 # (K,)
+    s_ref[...] = decay_out[:, None] * s_in + \
+        (k * jnp.exp(c[-1][None, :] - c)).T @ v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(r, k, v, w, u, *, chunk: int = 16, interpret: bool = False):
+    """r,k,w: (BH, T, K); v: (BH, T, V); u: (BH, K) → y (BH, T, V).
+    T must divide by `chunk` (ops-level callers pad)."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    grid = (BH, n_chunks)
+    kernel = functools.partial(_kernel, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, K), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)
+
+
+def wkv_ref(r, k, v, w, u):
+    """Sequential oracle — the recurrence exactly as rwkv6._time_mix."""
+    rf, kf, vf, wf = (a.astype(jnp.float32).transpose(1, 0, 2)
+                      for a in (r, k, v, w))            # (T, BH, ·)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (BH, K, V)
+        y = jnp.einsum("bi,bij->bj", r_t, S + uf[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((r.shape[0], r.shape[2], v.shape[2]), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2).astype(r.dtype)
+
+
+def wkv_chunked_jnp(r, k, v, w, u, chunk: int = 16, s0=None):
+    """Pure-jnp chunked form (same math as the kernel) — the model-level
+    fast path for training/prefill on any backend. ``s0``: optional
+    (BH, K, V) carry-in state. Returns (y, s_final)."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    n = T // chunk
+    rc, kc, wc = (a.astype(jnp.float32).reshape(BH, n, chunk, K)
+                  for a in (r, k, w))
+    vc = v.astype(jnp.float32).reshape(BH, n, chunk, V)
+    lw = jnp.log(jnp.maximum(wc, 1e-30))
+    c = jnp.cumsum(lw, axis=2)
+    cp = c - lw
+    D = cp[:, :, :, None, :] - c[:, :, None, :, :]      # (BH,n,L,L,K)
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+    E = jnp.where(mask[None, None, :, :, None], jnp.exp(D), 0.0)
+    att = jnp.einsum("bntk,bnsk,bntsk->bnts", rc, kc, E)
+    diag = jnp.einsum("bntk,bntk->bnt", rc * u[:, None, None, :], kc)
+    att = att + jnp.eye(chunk)[None, None] * diag[..., None]
+    y_intra = jnp.einsum("bnts,bnsv->bntv", att, vc)
+
+    # inter-chunk: scan the state over chunks
+    k_dec = kc * jnp.exp(c[:, :, -1:, :] - c)            # (BH,n,L,K)
+    s_updates = jnp.einsum("bntk,bntv->bnkv", k_dec, vc)
+    chunk_decay = jnp.exp(c[:, :, -1, :])                # (BH,n,K)
+
+    def scan_chunks(S, xs):
+        upd, dec, r_exp = xs
+        y = jnp.einsum("btk,bkv->btv", r_exp, S)
+        S = dec[:, :, None] * S + upd
+        return S, y
+
+    r_exp = rc * jnp.exp(cp)                             # (BH,n,L,K)
+    S0 = (jnp.zeros((BH, K, V), jnp.float32) if s0 is None
+          else s0.astype(jnp.float32))
+    S_final, y_inter = jax.lax.scan(
+        scan_chunks, S0,
+        (s_updates.transpose(1, 0, 2, 3), chunk_decay.transpose(1, 0, 2),
+         r_exp.transpose(1, 0, 2, 3)))
+    y = y_intra + y_inter.transpose(1, 0, 2, 3)
+    return y.reshape(BH, T, V).astype(r.dtype), S_final

@@ -1,0 +1,191 @@
+"""Trip-count-aware HLO analysis for the roofline terms.
+
+``compiled.cost_analysis()`` counts each While body ONCE, so scan-over-
+layers models under-report FLOPs by ~L×. This module parses the post-SPMD
+per-device HLO text into its computation call graph, extracts per-
+computation dot FLOPs / dot bytes / collective bytes, and walks the graph
+multiplying by ``known_trip_count`` at each while op.
+
+Reported terms (per device):
+  * dot_flops        — 2·M·N·K summed over dot ops × trip counts. Vector
+                       (elementwise) FLOPs are excluded: on TPU the MXU
+                       term dominates the compute roofline.
+  * dot_bytes        — Σ (lhs + rhs + out) bytes of every dot × trips: a
+                       proxy for HBM traffic (weights/activations stream
+                       HBM→VMEM per matmul; elementwise chains fuse).
+  * collective_bytes — Σ output bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute ×
+                       trips, per op type.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
+    r"%?([\w\.\-]+)")
+
+
+def _dims(s: str) -> list[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def _nelems(s: str) -> int:
+    n = 1
+    for d in _dims(s):
+        n *= d
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _nelems(dims) * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Comp:
+    name: str
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: {o: 0.0 for o in COLL_OPS})
+    coll_counts: dict = field(default_factory=lambda: {o: 0 for o in COLL_OPS})
+    coll_f32_bytes: float = 0.0   # f32-wire collectives (CPU-lowering artifact)
+    calls: list = field(default_factory=list)   # (callee, multiplier)
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_dot(line: str, symtab: dict) -> tuple[float, float]:
+    """(flops, bytes) of one dot line; operand shapes via the computation's
+    symbol table (HLO prints operands as bare %names)."""
+    md = _DEF_RE.match(line)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if md is None or mc is None:
+        return 0.0, 0.0
+    out_dt, out_dims = md.group(2), md.group(3)
+    args_part = line.split(" dot(", 1)[1].split(")", 1)[0]
+    ops = _OPERAND_RE.findall(args_part)
+    lhs = symtab.get(ops[0]) if ops else None
+    rhs = symtab.get(ops[1]) if len(ops) > 1 else None
+    if lhs is None:
+        return 0.0, 0.0
+    ld = _dims(lhs[1])
+    contract = 1
+    for ci in _dims(mc.group(1)):
+        if ci < len(ld):
+            contract *= ld[ci]
+    flops = 2.0 * _nelems(out_dims) * contract
+    b = _shape_bytes(out_dt, out_dims) + _shape_bytes(lhs[0], lhs[1])
+    if rhs is not None:
+        b += _shape_bytes(rhs[0], rhs[1])
+    return flops, b
+
+
+def parse_hlo(text: str) -> dict[str, Comp]:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    symtab: dict = {}
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)", line)
+            if m:
+                cur = Comp(m.group(2))
+                comps[cur.name] = cur
+                symtab = {}
+                # computation parameters carry shapes in the header
+                for pn, pd, ps in _PARAM_RE.findall(line):
+                    symtab[pn] = (pd, ps)
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        md = _DEF_RE.match(line)
+        if md:
+            symtab[md.group(1)] = (md.group(2), md.group(3))
+        if " dot(" in line:
+            f, b = _parse_dot(line, symtab)
+            cur.dot_flops += f
+            cur.dot_bytes += b
+        for op in COLL_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split(f" {op}")[0]
+                shapes = _SHAPE_RE.findall(lhs)
+                b = sum(_shape_bytes(d, s) for d, s in shapes)
+                cur.coll_bytes[op] += b
+                cur.coll_counts[op] += 1
+                cur.coll_f32_bytes += sum(
+                    _shape_bytes(d, s) for d, s in shapes if d == "f32")
+                break
+        if " while(" in line:
+            trip = 1
+            mt = _TRIP_RE.search(line)
+            if mt:
+                trip = int(mt.group(1))
+            names = _CALL_ATTR_RE.findall(line)
+            for n in names:
+                cur.calls.append((n, trip))
+        elif any(k in line for k in ("calls=", "to_apply=",
+                                     "branch_computations=")):
+            for n in _CALL_ATTR_RE.findall(line):
+                cur.calls.append((n, 1))
+    comps["__entry__"] = comps.get(entry, Comp("__missing__"))
+    return comps
+
+
+def analyze(text: str) -> dict:
+    """Walk the call graph from ENTRY with trip-count multipliers."""
+    comps = parse_hlo(text)
+    entry = comps["__entry__"]
+    memo: dict[str, tuple] = {}
+
+    def total(name: str):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, {o: 0.0 for o in COLL_OPS},
+                    {o: 0 for o in COLL_OPS}, 0.0)
+        memo[name] = (0.0, 0.0, {o: 0.0 for o in COLL_OPS},
+                      {o: 0 for o in COLL_OPS}, 0.0)  # cycle guard
+        f, b = c.dot_flops, c.dot_bytes
+        cb = dict(c.coll_bytes)
+        cc = dict(c.coll_counts)
+        f32b = c.coll_f32_bytes
+        for callee, mult in c.calls:
+            cf, cbytes, ccoll, ccnt, cf32 = total(callee)
+            f += mult * cf
+            b += mult * cbytes
+            f32b += mult * cf32
+            for o in COLL_OPS:
+                cb[o] += mult * ccoll[o]
+                cc[o] += mult * ccnt[o]
+        memo[name] = (f, b, cb, cc, f32b)
+        return memo[name]
+
+    f, b, cb, cc, f32b = total(entry.name)
+    total_b = sum(cb.values())
+    return {"dot_flops": f, "dot_bytes": b,
+            "collective_bytes": cb, "collective_counts": cc,
+            "collective_total_bytes": total_b,
+            # XLA:CPU promotes bf16 reduces to f32 wire format; on TPU the
+            # same collectives move bf16 — count those payloads at half.
+            "collective_f32_bytes": f32b,
+            "collective_total_bytes_tpu": total_b - 0.5 * f32b}

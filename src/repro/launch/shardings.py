@@ -1,0 +1,164 @@
+"""Sharding rules: parameter/activation PartitionSpecs by path + shape.
+
+Layout (DESIGN.md §4):
+  * batch over ("pod","data") — pure DP across pods;
+  * tensor parallelism over "model": attention heads, FFN hidden, vocab,
+    MoE experts (EP);
+  * FSDP (ZeRO-3) over "data" for the *other* matrix dim of every weight —
+    GSPMD all-gathers on use;
+  * every rule checks divisibility and falls back to replication for that
+    dim, so odd head counts (whisper H=6, rwkv H=40) stay correct.
+
+Quantized leaves: SplitQuantTensor.q/.cid shard like the weight; scales are
+replicated (k×N fp32 — negligible).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.apply import infer_stack_dims
+from .mesh import data_axes
+
+#: projections whose FIRST matrix dim is the TP dim (output/down projs)
+ROW_TP_FRAGMENTS = ("w_down", "wo", "w_out", "bo", "ffn/wv")
+#: leaves that are semantically embedding tables (vocab-dim TP)
+TABLE_FRAGMENTS = ("embed", "pos_table", "enc_pos", "dec_pos")
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = ([_axis_size(mesh, a) for a in axis]
+             if isinstance(axis, tuple) else [_axis_size(mesh, axis)])
+    n = 1
+    for s in sizes:
+        n *= s
+    return dim % n == 0 and dim >= n
+
+
+def _guard(shape, spec, mesh):
+    """Replace non-divisible entries with None."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+def spec_for_param(path_s: str, leaf, mesh, fsdp_enabled: bool = True) -> P:
+    """PartitionSpec for one parameter leaf (dense array).
+
+    ``fsdp_enabled=False`` is the SERVING layout: weights replicated over
+    the data axes, TP-only — no per-step FSDP all-gathers. This is what
+    low-bit quantization buys at scale: e.g. mistral-large-123b INT4 is
+    5.8 GB/chip TP-16-resident, where bf16 (15.4 GB) does not fit beside
+    its KV cache (DESIGN.md §2, EXPERIMENTS.md §Perf cell C).
+    """
+    fsdp, tp = ("data" if fsdp_enabled else None), "model"
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    if any(f in path_s for f in TABLE_FRAGMENTS):
+        # (V, d) tables: vocab over TP, features over FSDP
+        spec = [None] * nd
+        if nd >= 2:
+            spec[-2], spec[-1] = tp, fsdp
+        return _guard(shape, spec, mesh)
+
+    sd = infer_stack_dims(path_s, leaf)
+    mat = nd - sd
+    if mat <= 1:
+        # biases / gates / norms: replicate (small)
+        return P(*([None] * nd))
+
+    lead = [None] * sd
+    is_expert = sd >= 2                        # (L, E, d, f) MoE experts
+    if is_expert:
+        lead = [None, tp]                      # EP over "model"
+        row_ax, col_ax = fsdp, None
+    elif any(f in path_s for f in ROW_TP_FRAGMENTS):
+        row_ax, col_ax = tp, fsdp              # (f|HD, d) down/out proj
+    else:
+        row_ax, col_ax = fsdp, tp              # (d, f|HD) up/in proj
+    spec = lead + [None] * (mat - 2) + [row_ax, col_ax]
+    return _guard(shape, spec, mesh)
+
+
+def param_shardings(params, mesh, fsdp: bool = True) -> Any:
+    """Pytree of NamedShardings matching `params` (dense or quantized).
+    SplitQuantTensor subleaves get derived specs. ``fsdp=False`` = serving
+    layout (TP-only, weights replicated over data)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        path_s = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                          for p in path).lower()
+        if path_s.endswith("/q") or path_s.endswith("/cid"):
+            base = path_s.rsplit("/", 1)[0]
+            spec = spec_for_param(base, leaf, mesh, fsdp_enabled=fsdp)
+        elif path_s.endswith("/scale") or path_s.endswith("/zero"):
+            spec = P(*([None] * leaf.ndim))
+        else:
+            spec = spec_for_param(path_s, leaf, mesh, fsdp_enabled=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch, mesh) -> Any:
+    """Batch-dim-0 sharding over the data axes for every batch leaf."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return NamedSharding(mesh, P())
+        s = [dp] + [None] * (len(shape) - 1)
+        return NamedSharding(mesh, _guard(shape, s, mesh))
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_shardings(cache, mesh) -> Any:
+    """KV/recurrent caches: (L, B, T, H, D)-style → batch over data axes,
+    head/feature dim over "model" when divisible."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    tp = "model"
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd <= 2:                      # slot_pos (L, T)
+            return NamedSharding(mesh, P(*([None] * nd)))
+        s = [None, dp] + [None] * (nd - 2)
+        if nd >= 4:
+            s[-2] = tp                   # heads (KV) / width dim
+            guarded = _guard(shape, s, mesh)
+            if nd == 5 and guarded[-2] is None:
+                # KV heads < TP degree (GQA kv=8 on TP=16): shard the
+                # TIME dim over "model" instead — keeps the 1.5 TB-scale
+                # 32k cache within HBM (§Perf cell C iter 2).
+                s = [None, dp, tp, None, None]
+            return NamedSharding(mesh, _guard(shape, s, mesh))
+        elif nd == 3:
+            s[-1] = tp                   # (L, B, r) recurrent state width
+        return NamedSharding(mesh, _guard(shape, s, mesh))
+
+    return jax.tree_util.tree_map(spec, cache)
+
+
+def opt_shardings(opt_state, param_sh, mesh) -> Any:
+    """Optimizer m/v/err mirror the param shardings; step is replicated."""
+    from repro.optim.adamw import OptState
+    rep = NamedSharding(mesh, P())
+    return OptState(step=rep, m=param_sh, v=param_sh,
+                    err=param_sh if opt_state.err is not None else None)

@@ -1,0 +1,38 @@
+"""Model zoo. `get_model(cfg)` returns the module implementing the family
+protocol: init / forward / loss_fn / prefill / decode_step / init_cache."""
+from __future__ import annotations
+
+from . import bert_tiny, griffin, rwkv6, transformer, whisper
+from .attention import KVCache
+from .griffin import GriffinCache
+from .rwkv6 import RWKVState
+from .whisper import WhisperCache
+
+
+def get_model(cfg):
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "audio": whisper,
+        "ssm": rwkv6,
+        "hybrid": griffin,
+        "encoder": bert_tiny,
+    }[cfg.family]
+
+
+def init_cache_for(cfg, batch_size: int, max_len: int, dtype=None):
+    import jax.numpy as jnp
+    dtype = dtype or jnp.bfloat16
+    if cfg.family == "ssm":
+        return rwkv6.init_state(cfg, batch_size, dtype)
+    if cfg.family == "hybrid":
+        return griffin.init_cache(cfg, batch_size, dtype)
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch_size, max_len, dtype)
+    return transformer.init_cache(cfg, batch_size, max_len, dtype)
+
+
+__all__ = ["get_model", "init_cache_for", "transformer", "rwkv6", "griffin",
+           "whisper", "bert_tiny", "KVCache", "GriffinCache", "RWKVState",
+           "WhisperCache"]

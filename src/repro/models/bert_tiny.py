@@ -1,0 +1,122 @@
+"""BERT-Tiny sequence classifier (Turc et al. 2019 — the paper's test
+vehicle): 2 layers, d=128, 2 heads, learned positions, post-LN, GELU FFN
+with biases, [CLS] pooler + classification head.
+
+This is the model quantized in the paper's Table 1; examples/ fine-tunes it
+on two synthetic text-classification datasets and reproduces the
+baseline-vs-SplitQuant comparison at INT2/4/8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attend
+from .common import (dense, dtype_of, embed_init, embed_lookup, he_init,
+                     layer_norm, stack_layer_init)
+
+
+def _init_layer(key, cfg, dtype):
+    d, H, D = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    z = lambda *s: jnp.zeros(s, dtype)
+    return {
+        "attn": {"wq": he_init(ks[0], (d, H * D), dtype), "bq": z(H * D),
+                 "wk": he_init(ks[1], (d, H * D), dtype), "bk": z(H * D),
+                 "wv": he_init(ks[2], (d, H * D), dtype), "bv": z(H * D),
+                 "wo": he_init(ks[3], (H * D, d), dtype), "bo": z(d)},
+        "ln1": {"norm_scale": jnp.ones((d,), dtype), "norm_bias": z(d)},
+        "ffn": {"w_up": he_init(ks[4], (d, cfg.d_ff), dtype),
+                "b_up": z(cfg.d_ff),
+                "w_down": he_init(ks[5], (cfg.d_ff, d), dtype,
+                                  fan_in=cfg.d_ff),
+                "b_down": z(d)},
+        "ln2": {"norm_scale": jnp.ones((d,), dtype), "norm_bias": z(d)},
+    }
+
+
+def init(key, cfg, n_classes: int, max_len: int = 128):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab, d), dtype),
+        "pos_table": embed_init(ks[1], (max_len, d), dtype),
+        "embed_ln": {"norm_scale": jnp.ones((d,), dtype),
+                     "norm_bias": jnp.zeros((d,), dtype)},
+        "layers": stack_layer_init(lambda k: _init_layer(k, cfg, dtype),
+                                   ks[2], cfg.n_layers),
+        "pooler": {"w": he_init(ks[3], (d, d), dtype),
+                   "b": jnp.zeros((d,), dtype)},
+        "classifier": {"w": he_init(ks[4], (d, n_classes), dtype),
+                       "b": jnp.zeros((n_classes,), dtype)},
+    }
+
+
+def forward(params, cfg, batch, *, act_quant=None, act_chunks: int = 1):
+    """batch: {tokens (B,S), mask (B,S) 1=real} → logits (B, n_classes).
+
+    ``act_quant``: optional QuantConfig for simulated ACTIVATION
+    quantization (paper §4.2). ``act_chunks=3`` applies the SplitQuant
+    activation split (per-chunk dynamic ranges); 1 = whole-tensor range
+    (the baseline an int engine would use).
+    """
+    from repro.core import split_activation_fake_quant
+
+    def aq(h):
+        if act_quant is None:
+            return h
+        return split_activation_fake_quant(h, act_quant, n_chunks=act_chunks)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    mask = batch.get("mask", jnp.ones_like(tokens))
+    x = embed_lookup(params["embed"], tokens) + \
+        params["pos_table"][None, :S]
+    x = layer_norm(x, params["embed_ln"]["norm_scale"],
+                   params["embed_ln"]["norm_bias"])
+    positions = jnp.arange(S, dtype=jnp.int32)
+    H, D = cfg.n_heads, cfg.head_dim
+    # padding mask folded into kv positions: masked slots get pos -1
+    kv_pos_b = jnp.where(mask > 0, positions[None, :], -1)     # (B, S)
+
+    def layer(x, lp):
+        a = lp["attn"]
+        x = aq(x)
+        q = dense(x, a["wq"], a["bq"]).reshape(B, S, H, D)
+        k = dense(x, a["wk"], a["bk"]).reshape(B, S, H, D)
+        v = dense(x, a["wv"], a["bv"]).reshape(B, S, H, D)
+        # per-example padding: vmap attend over the batch
+        o = jax.vmap(lambda qi, ki, vi, pi: attend(
+            qi[None], ki[None], vi[None], positions, pi,
+            causal=False)[0])(q, k, v, kv_pos_b)
+        o = aq(o.reshape(B, S, H * D))
+        x = layer_norm(x + dense(o, a["wo"], a["bo"]),
+                       lp["ln1"]["norm_scale"], lp["ln1"]["norm_bias"])
+        h = jax.nn.gelu(dense(aq(x), lp["ffn"]["w_up"], lp["ffn"]["b_up"]))
+        h = dense(aq(h), lp["ffn"]["w_down"], lp["ffn"]["b_down"])
+        x = layer_norm(x + h, lp["ln2"]["norm_scale"],
+                       lp["ln2"]["norm_bias"])
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["layers"])
+    cls = x[:, 0]
+    pooled = jnp.tanh(dense(cls, params["pooler"]["w"], params["pooler"]["b"]))
+    return dense(pooled, params["classifier"]["w"],
+                 params["classifier"]["b"]).astype(jnp.float32)
+
+
+def loss_fn(params, cfg, batch, **_):
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]                                   # (B,)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}
+
+
+def accuracy(params, cfg, batch):
+    logits = forward(params, cfg, batch)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                    .astype(jnp.float32))

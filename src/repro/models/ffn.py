@@ -1,0 +1,159 @@
+"""Feed-forward layers: gated-linear-unit variants and the sort-based
+dropping MoE (expert parallelism over the "model" mesh axis).
+
+MoE dispatch: the classic one-hot einsum dispatch materializes a
+(tokens × experts × capacity) tensor — O(10^15) elements at kimi-k2 scale —
+so we use sort-based dispatch instead: token→expert pairs are scattered
+into a dense (E, C, d) buffer by expert id with position-in-expert from a
+cumulative count; tokens over capacity are dropped (GShard semantics,
+capacity_factor configurable). The (E, C, d) buffer shards E over "model"
+(expert parallelism) and C over "data", so GSPMD lowers the dispatch to an
+all-to-all — the same schedule a hand-written EP implementation uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, he_init, materialize, shard_hint, tp_dense
+
+
+def init_ffn(key, d_model: int, d_ff: int, ffn_type: str, dtype, bias=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if ffn_type in ("swiglu", "geglu"):
+        p = {"w_gate": he_init(k1, (d_model, d_ff), dtype),
+             "w_up": he_init(k2, (d_model, d_ff), dtype),
+             "w_down": he_init(k3, (d_ff, d_model), dtype, fan_in=d_ff)}
+    else:  # gelu
+        p = {"w_up": he_init(k2, (d_model, d_ff), dtype),
+             "w_down": he_init(k3, (d_ff, d_model), dtype, fan_in=d_ff)}
+        if bias:
+            p["b_up"] = jnp.zeros((d_ff,), dtype)
+            p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def apply_ffn(p, x, ffn_type: str):
+    hint = lambda h: shard_hint(h, *(("dp",) + (None,) * (h.ndim - 2) +
+                                     ("tp",)))
+    # NOTE (§Perf cell A iter 3, refuted): routing the down-projection
+    # through common.tp_dense (explicit shard_map psum) ADDED ~1 TB/dev of
+    # backward-pass collectives vs GSPMD's native schedule — GSPMD is at
+    # the Megatron row-parallel floor here already. The f32-wire artifact
+    # it exposed is handled in hlo_analysis (TPU-adjusted accounting).
+    if ffn_type == "swiglu":
+        h = hint(jax.nn.silu(dense(x, p["w_gate"])) * dense(x, p["w_up"]))
+        return shard_hint(dense(h, p["w_down"]), "dp", None, None)
+    if ffn_type == "geglu":
+        h = hint(jax.nn.gelu(dense(x, p["w_gate"])) * dense(x, p["w_up"]))
+        return shard_hint(dense(h, p["w_down"]), "dp", None, None)
+    h = hint(jax.nn.gelu(dense(x, p["w_up"], p.get("b_up"))))
+    return dense(h, p["w_down"], p.get("b_down"))
+
+
+# -------------------------------------------------------------------- MoE --
+def init_moe(key, cfg, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": he_init(kr, (d, E), jnp.float32),
+        "w_gate": he_init(jax.random.fold_in(ke, 0), (E, d, f), dtype),
+        "w_up": he_init(jax.random.fold_in(ke, 1), (E, d, f), dtype),
+        "w_down": he_init(jax.random.fold_in(ke, 2), (E, f, d), dtype, fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks, d, f * cfg.n_shared_experts, "swiglu", dtype)
+    return p
+
+
+def _dispatch_block(xt, gate, eidx, E, K, C, dtype):
+    """Sort-based dispatch of ONE token block (no cross-block indexing, so
+    under GSPMD with the block axis sharded over the data axes every
+    scatter/gather stays shard-local). xt: (Tb, d); returns
+    (buf (E, C, d), flat_e, safe_pos, wsrc)."""
+    Tb, d = xt.shape
+    flat_e = eidx.reshape(-1)                                  # (Tb·K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))      # (E,)
+    pos_sorted = jnp.arange(Tb * K) - seg_start[sorted_e]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, C - 1)
+    src = jnp.repeat(xt, K, axis=0)                            # (Tb·K, d)
+    # keep the gate in the activation dtype: a f32 literal here promotes
+    # every downstream activation (and its collectives) to f32
+    zero = jnp.zeros((), gate.dtype)
+    wsrc = jnp.where(keep, gate.reshape(-1), zero)[:, None]
+    buf = jnp.zeros((E, C, d), dtype)
+    buf = buf.at[flat_e, safe_pos].add(jnp.where(keep[:, None], src, 0))
+    return buf, flat_e, safe_pos, wsrc
+
+
+def apply_moe(p, x, cfg, capacity_factor: float | None = None,
+              n_blocks: int = 1):
+    """x: (B, S, d) → (B, S, d); returns (out, aux_loss).
+
+    ``n_blocks``: dispatch locality blocks. Set = the data-parallel degree
+    so each block's sort/scatter is local to one data shard; the only
+    cross-shard traffic is then the (block, E, C, d) → (E, block, C, d)
+    transpose — the canonical EP dispatch all-to-all. (EXPERIMENTS.md §Perf
+    kimi iter 2: the global-argsort dispatch made GSPMD replicate the
+    whole buffer.)
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    if n_blocks > 1 and T % n_blocks != 0:
+        n_blocks = 1
+    Tb = T // n_blocks
+    cf = capacity_factor or cfg.capacity_factor
+    if Tb <= 512:
+        # small-T (decode / tests): capacity = Tb ⇒ provably no drops, so
+        # decode is bit-exact vs the full forward pass
+        C = Tb
+    else:
+        C = max(1, int(Tb * K * cf) // E)
+
+    xt = x.reshape(T, d)
+    logits = dense(xt.astype(jnp.float32), p["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                       # (T, K)
+    gate = (gate / jnp.sum(gate, axis=-1, keepdims=True)).astype(x.dtype)
+
+    # load-balancing aux loss (Switch): E * Σ_e f_e · p_e
+    me = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    pe = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * pe)
+
+    # ---- block-local dispatch (vmapped over the dp-sharded block axis) --
+    xb = shard_hint(xt.reshape(n_blocks, Tb, d), "dp", None, None)
+    gb = gate.reshape(n_blocks, Tb, K)
+    eb = eidx.reshape(n_blocks, Tb, K)
+    buf, flat_e, safe_pos, wsrc = jax.vmap(
+        lambda xx, gg, ee: _dispatch_block(xx, gg, ee, E, K, C, x.dtype)
+    )(xb, gb, eb)                                # buf: (n_blocks, E, C, d)
+
+    # ---- EP all-to-all: block-major → expert-major ----
+    bufe = shard_hint(buf.transpose(1, 0, 2, 3), "tp", "dp", None, None)
+
+    # ---- expert computation (E sharded over "model") ----
+    wg = materialize(p["w_gate"], x.dtype)
+    wu = materialize(p["w_up"], x.dtype)
+    wd = materialize(p["w_down"], x.dtype)
+    h = jnp.einsum("encd,edf->encf", bufe, wg)
+    u = jnp.einsum("encd,edf->encf", bufe, wu)
+    y = shard_hint(jnp.einsum("encf,efd->encd", jax.nn.silu(h) * u, wd),
+                   "tp", "dp", None, None)
+
+    # ---- combine: all-to-all back, block-local gather, gate-weight ----
+    yb = shard_hint(y.transpose(1, 0, 2, 3), "dp", None, None, None)
+    out_b = jax.vmap(
+        lambda yy, ee, pp, ww: (yy[ee, pp] * ww.astype(x.dtype))
+        .reshape(Tb, K, d).sum(axis=1)
+    )(yb, flat_e, safe_pos, wsrc)                # (n_blocks, Tb, d)
+    out = shard_hint(out_b, "dp", None, None).reshape(T, d)
+
+    if "shared" in p:
+        out = out + apply_ffn(p["shared"], xt, "swiglu")
+    return out.reshape(B, S, d), aux

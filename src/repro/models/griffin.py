@@ -1,0 +1,290 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): hybrid of RG-LRU recurrent
+blocks and local (windowed, MQA) attention in a 1 attn : 2 recurrent ratio.
+
+Layer pattern: groups of (rec, rec, attn) scanned together; remainder layers
+(n_layers mod 3) are trailing recurrent layers. The RG-LRU is a linear
+elementwise recurrence, so prefill/training uses `jax.lax.associative_scan`
+(parallel scan — O(log T) depth) and decode keeps an O(1) state; the local
+attention keeps a ring KV cache of `window` slots. Both properties make the
+long_500k cell runnable (DESIGN.md §5).
+
+Gate parameters (Λ, input/recurrence gates) are semantically-not-weights
+(paper §4.1) → excluded from quantization via the "rg_lru" path fragment.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block
+from .common import (apply_norm, dense, dtype_of, embed_init, embed_lookup,
+                     he_init, init_norm, stack_layer_init)
+from .ffn import apply_ffn, init_ffn
+
+LRU_C = 8.0   # Griffin's fixed gate sharpness
+
+
+class GriffinCache(NamedTuple):
+    rec_h: jnp.ndarray       # (Lr, B, lru)      RG-LRU hidden state, fp32
+    rec_conv: jnp.ndarray    # (Lr, B, cw-1, lru) temporal-conv tail
+    attn_k: jnp.ndarray      # (La, B, W, Hkv, D) ring buffer
+    attn_v: jnp.ndarray
+    attn_pos: jnp.ndarray    # (La, W) slot→absolute position (-1 empty)
+
+
+def _lru_width(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def _init_rec(key, cfg, dtype):
+    d, r = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": init_norm(d, cfg.norm_type, dtype),
+        "w_x": he_init(ks[0], (d, r), dtype),          # recurrent branch in
+        "w_gate_branch": he_init(ks[1], (d, r), dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, r)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        "rg_lru_lambda": jnp.full((r,), 2.0, jnp.float32),   # a≈σ(Λ)
+        "rg_lru_wa": he_init(ks[3], (r, r), jnp.float32) * 0.1,
+        "rg_lru_ba": jnp.zeros((r,), jnp.float32),
+        "rg_lru_wx": he_init(ks[4], (r, r), jnp.float32) * 0.1,
+        "rg_lru_bx": jnp.zeros((r,), jnp.float32),
+        "w_out": he_init(ks[5], (r, d), dtype, fan_in=r),
+        "ln_mlp": init_norm(d, cfg.norm_type, dtype),
+        "mlp": init_ffn(ks[6], d, cfg.d_ff, cfg.ffn_type, dtype),
+    }
+
+
+def _init_attn(key, cfg, dtype):
+    d, Hq, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": init_norm(d, cfg.norm_type, dtype),
+        "attn": {"wq": he_init(ks[0], (d, Hq * D), dtype),
+                 "wk": he_init(ks[1], (d, Hkv * D), dtype),
+                 "wv": he_init(ks[2], (d, Hkv * D), dtype),
+                 "wo": he_init(ks[3], (Hq * D, d), dtype, fan_in=Hq * D)},
+        "ln_mlp": init_norm(d, cfg.norm_type, dtype),
+        "mlp": init_ffn(ks[4], d, cfg.d_ff, cfg.ffn_type, dtype),
+    }
+
+
+def layout(cfg):
+    """(n_groups, n_tail_rec): groups of (rec, rec, attn) + trailing recs."""
+    n_groups = cfg.n_layers // 3
+    return n_groups, cfg.n_layers - 3 * n_groups
+
+
+def init(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, kg, kt, kh = jax.random.split(key, 4)
+    n_groups, n_tail = layout(cfg)
+    params = {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), dtype),
+        "groups": stack_layer_init(
+            lambda k: {
+                "rec1": _init_rec(jax.random.fold_in(k, 0), cfg, dtype),
+                "rec2": _init_rec(jax.random.fold_in(k, 1), cfg, dtype),
+                "attn": _init_attn(jax.random.fold_in(k, 2), cfg, dtype),
+            }, kg, n_groups),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type, dtype),
+        "lm_head": he_init(kh, (cfg.d_model, cfg.vocab), dtype),
+    }
+    if n_tail:
+        params["tail"] = stack_layer_init(
+            lambda k: _init_rec(k, cfg, dtype), kt, n_tail)
+    return params
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise temporal conv, width cw. x: (B,T,r). conv_state: (B,cw-1,r)
+    carry-in for decode. Returns (y, new_state)."""
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, T+cw-1, r)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(cw))
+    return y + b.astype(x.dtype), xp[:, -(cw - 1):, :]
+
+
+def _rg_lru(p, x, h0):
+    """x: (B,T,r) fp32 path. h_t = a_t·h_{t-1} + √(1-a_t²)·(i_t·x_t).
+    Parallel associative scan over T; h0: (B, r) carry."""
+    xf = x.astype(jnp.float32)
+    rt = jax.nn.sigmoid(xf @ p["rg_lru_wa"] + p["rg_lru_ba"])
+    it = jax.nn.sigmoid(xf @ p["rg_lru_wx"] + p["rg_lru_bx"])
+    log_a = -LRU_C * jax.nn.softplus(p["rg_lru_lambda"]) * rt   # (B,T,r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0)) * (it * xf)
+    # fold carry-in into the first step
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :].astype(jnp.float32)
+
+
+def _rec_block(cfg, p, x, state):
+    """Griffin recurrent block + its MLP. state: (h0, conv_state)."""
+    h0, conv_state = state
+    from .common import shard_hint
+    x = shard_hint(x, "dp", None, None)
+    h = apply_norm(x, p["ln"], cfg.norm_type)
+    u = shard_hint(dense(h, p["w_x"]), "dp", None, "tp")
+    from .common import materialize
+    u, conv_state = _causal_conv(u, materialize(p["conv_w"]),
+                                 materialize(p["conv_b"]), conv_state)
+    u, h_last = _rg_lru(p, u, h0)
+    g = jax.nn.gelu(dense(h, p["w_gate_branch"]))
+    x = x + dense(u * g, p["w_out"])
+    m = apply_norm(x, p["ln_mlp"], cfg.norm_type)
+    x = x + apply_ffn(p["mlp"], m, cfg.ffn_type)
+    return x, (h_last, conv_state)
+
+
+def _attn_block(cfg, p, x, positions, cache_layer, kv_chunk, want_kv):
+    h = apply_norm(x, p["ln"], cfg.norm_type)
+    out, kv = attention_block(p["attn"], h, cfg, positions, cache_layer,
+                              causal=True, window=cfg.window,
+                              kv_chunk=kv_chunk, want_kv=want_kv)
+    x = x + out
+    m = apply_norm(x, p["ln_mlp"], cfg.norm_type)
+    x = x + apply_ffn(p["mlp"], m, cfg.ffn_type)
+    return x, kv
+
+
+def init_cache(cfg, batch_size: int, dtype=jnp.bfloat16) -> GriffinCache:
+    n_groups, n_tail = layout(cfg)
+    Lr, La = 2 * n_groups + n_tail, n_groups
+    r, W = _lru_width(cfg), cfg.window
+    return GriffinCache(
+        rec_h=jnp.zeros((Lr, batch_size, r), jnp.float32),
+        rec_conv=jnp.zeros((Lr, batch_size, cfg.conv_width - 1, r), dtype),
+        attn_k=jnp.zeros((La, batch_size, W, cfg.n_kv_heads, cfg.head_dim),
+                         dtype),
+        attn_v=jnp.zeros((La, batch_size, W, cfg.n_kv_heads, cfg.head_dim),
+                         dtype),
+        attn_pos=jnp.full((La, W), -1, jnp.int32))
+
+
+def forward(params, cfg, batch, cache: GriffinCache | None = None,
+            positions=None, *, kv_chunk=None, remat=False,
+            want_cache=False):
+    """Returns (logits, new_cache_or_None).
+
+    S == 1 with a cache ⇒ decode (ring-buffer attention + O(1) rec states).
+    Otherwise prefill/train: recurrent states start from the given cache (or
+    zeros), attention runs windowed over the sequence, and with
+    ``want_cache`` a fresh ring cache is assembled from the tail window.
+    """
+    from .transformer import assemble_cache  # shared ring assembly
+
+    x = embed_lookup(params["embed"], batch["tokens"])
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    n_groups, n_tail = layout(cfg)
+    decode = cache is not None and S == 1
+    work = cache if cache is not None else init_cache(cfg, B, x.dtype)
+
+    def group_fn(cfg, gp, x, gstate):
+        (h1, c1), (h2, c2), attn_cl = gstate
+        x, s1 = _rec_block(cfg, gp["rec1"], x, (h1, c1))
+        x, s2 = _rec_block(cfg, gp["rec2"], x, (h2, c2))
+        x, kv = _attn_block(cfg, gp["attn"], x, positions, attn_cl,
+                            kv_chunk, want_kv=want_cache and not decode)
+        return x, (s1, s2, kv)
+
+    fn = group_fn
+    if remat:
+        fn = jax.checkpoint(group_fn, static_argnums=(0,))
+
+    # group g uses rec-state rows 2g, 2g+1
+    h1s, c1s = work.rec_h[0:2 * n_groups:2], work.rec_conv[0:2 * n_groups:2]
+    h2s, c2s = work.rec_h[1:2 * n_groups:2], work.rec_conv[1:2 * n_groups:2]
+
+    if decode:
+        def step(x, xs):
+            gp, h1, c1, h2, c2, ck, cv, sp = xs
+            x, ((h1, c1), (h2, c2), (ck, cv, sp)) = fn(
+                cfg, gp, x, ((h1, c1), (h2, c2), (ck, cv, sp)))
+            return x, (h1, c1, h2, c2, ck, cv, sp)
+        x, (h1s, c1s, h2s, c2s, cks, cvs, sps) = jax.lax.scan(
+            step, x, (params["groups"], h1s, c1s, h2s, c2s,
+                      work.attn_k, work.attn_v, work.attn_pos))
+    else:
+        def step(x, xs):
+            gp, h1, c1, h2, c2 = xs
+            x, ((h1, c1), (h2, c2), kv) = fn(
+                cfg, gp, x, ((h1, c1), (h2, c2), None))
+            return x, (h1, c1, h2, c2, kv)
+        x, (h1s, c1s, h2s, c2s, kvs) = jax.lax.scan(
+            step, x, (params["groups"], h1s, c1s, h2s, c2s))
+
+    tail_states = []
+    for i in range(n_tail):
+        li = 2 * n_groups + i
+        x, st = _rec_block(cfg, jax.tree_util.tree_map(lambda a: a[i],
+                                                       params["tail"]),
+                           x, (work.rec_h[li], work.rec_conv[li]))
+        tail_states.append(st)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = dense(x, params["lm_head"]).astype(jnp.float32)
+
+    if not decode and not want_cache and cache is None:
+        return logits, None
+
+    # reassemble recurrent states
+    rec_h = work.rec_h.at[0:2 * n_groups:2].set(h1s.astype(jnp.float32)) \
+        .at[1:2 * n_groups:2].set(h2s.astype(jnp.float32))
+    rec_conv = work.rec_conv.at[0:2 * n_groups:2].set(
+        c1s.astype(work.rec_conv.dtype)).at[1:2 * n_groups:2].set(
+        c2s.astype(work.rec_conv.dtype))
+    for i, (h, c) in enumerate(tail_states):
+        li = 2 * n_groups + i
+        rec_h = rec_h.at[li].set(h.astype(jnp.float32))
+        rec_conv = rec_conv.at[li].set(c.astype(rec_conv.dtype))
+
+    if decode:
+        ak, av, ap = cks, cvs, sps
+    elif want_cache:
+        ring = assemble_cache(cfg, [kvs], positions, max_len=cfg.window)
+        ak, av, ap = (ring.k.reshape(work.attn_k.shape),
+                      ring.v.reshape(work.attn_v.shape), ring.slot_pos)
+    else:
+        ak, av, ap = work.attn_k, work.attn_v, work.attn_pos
+    return logits, GriffinCache(rec_h, rec_conv, ak, av, ap)
+
+
+def loss_fn(params, cfg, batch, *, kv_chunk=None, remat=True, **_):
+    logits, _ = forward(params, cfg, batch, kv_chunk=kv_chunk, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"loss": loss}
+
+
+def decode_step(params, cfg, cache: GriffinCache, tokens, pos):
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    return forward(params, cfg, {"tokens": tokens}, cache=cache,
+                   positions=positions)
+
+
+def prefill(params, cfg, batch, *, kv_chunk=None, **_):
+    """Prefill from zero state. The returned cache carries the recurrent
+    states and a ring KV cache of the last `window` positions."""
+    return forward(params, cfg, batch, kv_chunk=kv_chunk, want_cache=True)

@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+decay. Matrix-valued per-head state ⇒ O(1) memory decode, which is why this
+arch runs the long_500k cell.
+
+Per-layer time-mix recurrence (head h, key-dim i, value-dim j):
+    S_t[i,j] = w_t[i] · S_{t-1}[i,j] + k_t[i] · v_t[j]
+    y_t[j]   = Σ_i r_t[i] · (S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+with data-dependent decay w_t = exp(-exp(d + tanh(x_w W1) W2)) ∈ (0,1).
+
+Projections for the whole sequence are batched matmuls (MXU work); only the
+elementwise state update is scanned over time. Decay/μ/u parameters are
+"semantically not weights" (paper §4.1) and are excluded from quantization
+via the "time_" path fragment.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_norm, dense, dtype_of, embed_init, embed_lookup,
+                     he_init, init_norm, stack_layer_init)
+
+LORA_MU, LORA_DECAY = 32, 64
+
+
+class RWKVState(NamedTuple):
+    """Recurrent cache: token-shift carries + per-head matrix state."""
+    att_xprev: jnp.ndarray   # (L, B, d)
+    ffn_xprev: jnp.ndarray   # (L, B, d)
+    wkv: jnp.ndarray         # (L, B, H, Dh, Dh) fp32
+
+
+def _init_layer(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    z = lambda *s: jnp.zeros(s, dtype)
+    return {
+        "ln1": init_norm(d, "rms", dtype),
+        "ln2": init_norm(d, "rms", dtype),
+        "att": {
+            "time_mu_x": z(d), "time_mu_w": z(d), "time_mu_k": z(d),
+            "time_mu_v": z(d), "time_mu_r": z(d), "time_mu_g": z(d),
+            "time_w1": he_init(ks[0], (d, 5 * LORA_MU), dtype),
+            "time_w2": he_init(ks[1], (5, LORA_MU, d), dtype, fan_in=LORA_MU),
+            "time_decay": jnp.full((d,), -4.0, dtype),
+            "time_decay_w1": he_init(ks[2], (d, LORA_DECAY), dtype),
+            "time_decay_w2": he_init(ks[3], (LORA_DECAY, d), dtype,
+                                     fan_in=LORA_DECAY),
+            "time_faaaa": z(H, Dh),
+            "wr": he_init(ks[4], (d, d), dtype),
+            "wk": he_init(ks[5], (d, d), dtype),
+            "wv": he_init(ks[6], (d, d), dtype),
+            "wg": he_init(ks[7], (d, d), dtype),
+            "wo": he_init(ks[8], (d, d), dtype),
+            "ln_x_scale": jnp.ones((d,), dtype),
+            "ln_x_bias": z(d),
+        },
+        "ffn": {
+            "time_mu_k": z(d), "time_mu_r": z(d),
+            "wr": he_init(ks[9], (d, d), dtype),
+            "wk": he_init(jax.random.fold_in(key, 91), (d, ff), dtype),
+            "wv": he_init(jax.random.fold_in(key, 92), (ff, d), dtype,
+                          fan_in=ff),
+        },
+    }
+
+
+def init(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), dtype),
+        "layers": stack_layer_init(lambda k: _init_layer(k, cfg, dtype),
+                                   kl, cfg.n_layers),
+        "final_norm": init_norm(cfg.d_model, "rms", dtype),
+        "lm_head": he_init(kh, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def _token_shift(x, x_prev):
+    """(B, T, d) → x_{t-1} with carry-in x_prev (B, d)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(x, xx, mu, lora):
+    return x + (xx - x) * (mu + lora)
+
+
+def _time_mix(p, x, cfg, x_prev, wkv_state):
+    """x: (B,T,d). Returns (out, new_x_prev, new_wkv_state)."""
+    B, T, d = x.shape
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xx = _token_shift(x, x_prev)
+    base = _ddlerp(x, xx, p["time_mu_x"], 0.0)
+    m = jnp.tanh(dense(base, p["time_w1"])).reshape(B, T, 5, LORA_MU)
+    lora = jnp.einsum("btfm,fmd->fbtd", m, p["time_w2"].astype(x.dtype))
+    xw = _ddlerp(x, xx, p["time_mu_w"], lora[0])
+    xk = _ddlerp(x, xx, p["time_mu_k"], lora[1])
+    xv = _ddlerp(x, xx, p["time_mu_v"], lora[2])
+    xr = _ddlerp(x, xx, p["time_mu_r"], lora[3])
+    xg = _ddlerp(x, xx, p["time_mu_g"], lora[4])
+
+    r = dense(xr, p["wr"]).reshape(B, T, H, Dh)
+    k = dense(xk, p["wk"]).reshape(B, T, H, Dh)
+    v = dense(xv, p["wv"]).reshape(B, T, H, Dh)
+    g = jax.nn.silu(dense(xg, p["wg"]))
+    dec = p["time_decay"].astype(jnp.float32) + dense(
+        jnp.tanh(dense(xw, p["time_decay_w1"])), p["time_decay_w2"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, T, H, Dh)            # (0,1)
+    u = p["time_faaaa"].astype(jnp.float32)                    # (H, Dh)
+
+    if T > 1 and T % 16 == 0:
+        # chunked linear-attention form (kernels/wkv_chunked.py): MXU
+        # matmuls instead of T sequential VPU steps — the TPU adaptation
+        # of RWKV-LM's CUDA WKV kernel. Exact (all decay exponents ≤ 0).
+        # NOTE (§Perf): the chunked form adds ~0.2 TB/dev of resharding
+        # collectives vs the step scan (the B·H fold), but removes
+        # 4096×32 sequential VPU steps per train step — a latency cost the
+        # byte-based roofline cannot see but which dominates on hardware.
+        from repro.kernels.wkv_chunked import wkv_chunked_jnp
+        fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, Dh)
+        yf, Sf = wkv_chunked_jnp(
+            fold(r), fold(k), fold(v), fold(w),
+            jnp.broadcast_to(u, (B, H, Dh)).reshape(B * H, Dh),
+            chunk=16, s0=wkv_state.reshape(B * H, Dh, Dh))
+        y = yf.reshape(B, H, T, Dh).transpose(0, 2, 1, 3) \
+            .reshape(B, T, d).astype(jnp.float32)
+        S = Sf.reshape(B, H, Dh, Dh)
+    else:
+        rf, kf, vf, wf = (a.astype(jnp.float32).transpose(1, 0, 2, 3)
+                          for a in (r, k, v, w))               # (T,B,H,Dh)
+
+        def step(S, xs):
+            r_t, k_t, v_t, w_t = xs
+            kv = k_t[..., :, None] * v_t[..., None, :]         # (B,H,Dh,Dh)
+            y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+            S = w_t[..., None] * S + kv
+            return S, y
+
+        S, ys = jax.lax.scan(step, wkv_state, (rf, kf, vf, wf))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, T, d)          # (B,T,d)
+
+    # per-head group norm
+    yh = y.reshape(B, T, H, Dh)
+    mu_ = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu_) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, T, d) * p["ln_x_scale"].astype(jnp.float32) + \
+        p["ln_x_bias"].astype(jnp.float32)
+    out = dense((y.astype(x.dtype)) * g, p["wo"])
+    return out, x[:, -1, :], S
+
+
+def _channel_mix(p, x, x_prev):
+    xx = _token_shift(x, x_prev)
+    xk = _ddlerp(x, xx, p["time_mu_k"], 0.0)
+    xr = _ddlerp(x, xx, p["time_mu_r"], 0.0)
+    r = jax.nn.sigmoid(dense(xr, p["wr"]))
+    k = jnp.square(jax.nn.relu(dense(xk, p["wk"])))
+    return r * dense(k, p["wv"]), x[:, -1, :]
+
+
+def _layer(cfg, p, x, state_layer):
+    from .common import shard_hint
+    ax, fx, S = state_layer
+    x = shard_hint(x, "dp", None, None)
+    h = apply_norm(x, p["ln1"], "rms")
+    att, ax, S = _time_mix(p["att"], h, cfg, ax, S)
+    x = x + att
+    h = apply_norm(x, p["ln2"], "rms")
+    ffn, fx = _channel_mix(p["ffn"], h, fx)
+    return x + ffn, (ax, fx, S)
+
+
+def init_state(cfg, batch_size: int, dtype=jnp.bfloat16) -> RWKVState:
+    d = cfg.d_model
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    L = cfg.n_layers
+    return RWKVState(
+        att_xprev=jnp.zeros((L, batch_size, d), dtype),
+        ffn_xprev=jnp.zeros((L, batch_size, d), dtype),
+        wkv=jnp.zeros((L, batch_size, H, Dh, Dh), jnp.float32))
+
+
+def forward(params, cfg, batch, state: RWKVState | None = None, *,
+            remat=False):
+    """Returns (logits, new_state)."""
+    x = embed_lookup(params["embed"], batch["tokens"])
+    B = x.shape[0]
+    if state is None:
+        state = init_state(cfg, B, x.dtype)
+
+    fn = _layer
+    if remat:
+        fn = jax.checkpoint(fn, static_argnums=(0,))
+
+    def step(x, xs):
+        lp, ax, fx, S = xs
+        x, (ax, fx, S) = fn(cfg, lp, x, (ax.astype(x.dtype),
+                                         fx.astype(x.dtype), S))
+        return x, (ax, fx, S)
+
+    x, (ax, fx, S) = jax.lax.scan(
+        step, x, (params["layers"], state.att_xprev, state.ffn_xprev,
+                  state.wkv))
+    x = apply_norm(x, params["final_norm"], "rms")
+    logits = dense(x, params["lm_head"]).astype(jnp.float32)
+    return logits, RWKVState(ax, fx, S)
+
+
+def loss_fn(params, cfg, batch, *, remat=True, **_):
+    logits, _ = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"loss": loss}
+
+
+def decode_step(params, cfg, state: RWKVState, tokens, pos=None):
+    logits, state = forward(params, cfg, {"tokens": tokens}, state)
+    return logits, state
+
+
+def prefill(params, cfg, batch, **_):
+    return forward(params, cfg, batch)

@@ -1,0 +1,125 @@
+"""AdamW with configurable state dtypes + global-norm clipping + optional
+int8 gradient compression with error feedback.
+
+State-dtype control matters at scale: fp32 m/v for a 405B model is 3.2 TB;
+bf16 states + stochastic-rounding-free update keeps the dry-run memory
+budget honest (DESIGN.md §7). Gradient compression halves (int8: quarters)
+the all-reduce bytes on the data axis — the collective roofline term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"      # "float32" | "bfloat16"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    grad_compress: Optional[str] = None   # None | "int8"
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+    err: Optional[dict]               # error-feedback residual (compression)
+
+
+def _state_dtype(cfg):
+    return jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+
+def init(cfg: OptConfig, params) -> OptState:
+    dt = _state_dtype(cfg)
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, dt), p)
+    err = zeros(params) if cfg.grad_compress else None
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros(params),
+                    v=zeros(params), err=err)
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def compress_int8(g, err):
+    """Symmetric per-tensor int8 quantization with error feedback. Returns
+    (decompressed_g, new_err). Applied BEFORE the data-axis all-reduce —
+    under GSPMD the psum then moves int-width bytes... in this jnp-level
+    simulation we model the value error while XLA still reduces fp; the
+    byte saving is realized in the serve/train launch path via
+    shard_map-wrapped int reductions (launch/collectives.py)."""
+    gf = g.astype(jnp.float32) + err.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf)) + 1e-12
+    scale = 127.0 / amax
+    q = jnp.clip(jnp.rint(gf * scale), -127, 127)
+    deq = q / scale
+    return deq.astype(g.dtype), (gf - deq).astype(err.dtype)
+
+
+def update(cfg: OptConfig, state: OptState, params, grads):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm:
+        factor = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * factor, grads)
+
+    new_err = state.err
+    if cfg.grad_compress == "int8":
+        pairs = jax.tree.map(compress_int8, grads, state.err)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v, new_err), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,94 @@
+"""Batched serving loop for quantized models.
+
+The deployment path of the paper: weights are SplitQuant-preprocessed and
+low-bit quantized once offline (`quantize_tree`), then served with the
+fused cluster-dequant matmul. The loop does continuous batching over a
+request queue: prefill new requests, decode the active batch one token per
+step, retire finished sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_new_tokens: int = 32
+    max_len: int = 256
+    temperature: float = 0.0        # 0 ⇒ greedy
+    eos_id: int = -1                # -1 ⇒ never stop early
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Minimal continuous-batching server (single-wave variant: requests
+    are grouped into prefill waves of up to max_batch; each wave decodes
+    together — the structure a production scheduler slots into)."""
+
+    def __init__(self, cfg, params, serve_cfg: ServeConfig,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.scfg = serve_cfg
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, cfg, c, t, pos))
+
+    def _sample(self, logits):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(k, logits[:, -1] / self.scfg.temperature)
+
+    def serve(self, requests: list[Request]) -> list[Request]:
+        scfg = self.scfg
+        for i in range(0, len(requests), scfg.max_batch):
+            wave = requests[i:i + scfg.max_batch]
+            S = max(len(r.prompt) for r in wave)
+            toks = np.zeros((len(wave), S), np.int32)
+            for j, r in enumerate(wave):
+                toks[j, S - len(r.prompt):] = r.prompt      # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            logits, cache = self.model.prefill(
+                self.params, self.cfg, batch, max_len=scfg.max_len)
+            tok = self._sample(logits)
+            for j, r in enumerate(wave):
+                r.out.append(int(tok[j]))
+            pos = S
+            for _ in range(scfg.max_new_tokens - 1):
+                logits, cache = self._decode(
+                    self.params, cache, tok[:, None].astype(jnp.int32),
+                    jnp.int32(pos))
+                tok = self._sample(logits)
+                pos += 1
+                alive = False
+                for j, r in enumerate(wave):
+                    if r.done:
+                        continue
+                    t = int(tok[j])
+                    if t == scfg.eos_id:
+                        r.done = True
+                    else:
+                        r.out.append(t)
+                        alive = True
+                if not alive:
+                    break
+            for r in wave:
+                r.done = True
+        return requests

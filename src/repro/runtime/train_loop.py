@@ -1,0 +1,119 @@
+"""Fault-tolerant training loop.
+
+Scale story (1000+ nodes):
+  * checkpoint/restart — atomic checkpoints every `ckpt_every` steps; on any
+    device/runtime failure the loop restores the last good step and resumes
+    (data pipeline is stateless, so resume = set the step counter);
+  * straggler mitigation — per-step wall-time EWMA; steps slower than
+    `straggler_factor`× the EWMA are logged and counted (on a real fleet
+    this signal feeds the reshard/elastic controller);
+  * retry budget — transient failures retry up to `max_failures` times
+    before surfacing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    max_failures: int = 3
+    straggler_factor: float = 3.0
+    log_every: int = 10
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float):
+        self.factor = factor
+        self.ewma: Optional[float] = None
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        self.ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: adamw.OptConfig):
+    """loss_fn(params, batch) → (loss, metrics). Returns jit-able
+    step(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, opt_state, params, grads)
+        return params, opt_state, {**metrics, **opt_metrics, "loss": loss}
+
+    return train_step
+
+
+def run(loop_cfg: TrainLoopConfig, train_step, params, opt_state,
+        make_batch: Callable[[int], dict], *, inject_failure=None,
+        log: Callable = print):
+    """Run to total_steps with checkpoint/restart. `inject_failure(step)`
+    (tests) may raise to exercise the recovery path.
+
+    Returns (params, opt_state, history).
+    """
+    step = 0
+    if loop_cfg.ckpt_dir:
+        last = ckpt_lib.latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            (params, opt_state), step = ckpt_lib.restore(
+                loop_cfg.ckpt_dir, (params, opt_state))
+            log(f"[restore] resumed from step {step}")
+
+    monitor = StragglerMonitor(loop_cfg.straggler_factor)
+    failures = 0
+    history = []
+    while step < loop_cfg.total_steps:
+        t0 = time.perf_counter()
+        try:
+            if inject_failure is not None:
+                inject_failure(step)
+            batch = make_batch(step)
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+        except (jax.errors.JaxRuntimeError, RuntimeError, ValueError) as e:
+            failures += 1
+            log(f"[failure] step {step}: {type(e).__name__}: {e}")
+            if failures > loop_cfg.max_failures:
+                raise
+            if loop_cfg.ckpt_dir and ckpt_lib.latest_step(loop_cfg.ckpt_dir) is not None:
+                (params, opt_state), step = ckpt_lib.restore(
+                    loop_cfg.ckpt_dir, (params, opt_state))
+                log(f"[recover] restored step {step}, retrying")
+            continue
+
+        dt = time.perf_counter() - t0
+        if monitor.observe(dt):
+            log(f"[straggler] step {step} took {dt*1e3:.1f} ms "
+                f"(ewma {monitor.ewma*1e3:.1f} ms)")
+        step += 1
+        history.append({k: float(v) for k, v in metrics.items()})
+        if step % loop_cfg.log_every == 0:
+            log(f"step {step:5d} loss {history[-1]['loss']:.4f} "
+                f"({dt*1e3:.0f} ms)")
+        if loop_cfg.ckpt_dir and step % loop_cfg.ckpt_every == 0:
+            ckpt_lib.save(loop_cfg.ckpt_dir, step, (params, opt_state),
+                          blocking=not loop_cfg.ckpt_async)
+    if loop_cfg.ckpt_dir:
+        ckpt_lib.wait_for_async()
+        ckpt_lib.save(loop_cfg.ckpt_dir, step, (params, opt_state),
+                      blocking=True)
+    return params, opt_state, history

@@ -1,0 +1,77 @@
+"""Property tests for 1-D k-means with greedy k-means++ init (paper §4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kmeans_1d
+
+
+def test_recovers_separated_clusters():
+    key = jax.random.PRNGKey(0)
+    x = jnp.concatenate([
+        -10 + 0.1 * jax.random.normal(key, (200,)),
+        0.1 * jax.random.normal(jax.random.fold_in(key, 1), (500,)),
+        10 + 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (200,)),
+    ])
+    res = kmeans_1d(key, x, k=3)
+    np.testing.assert_allclose(np.asarray(res.centroids), [-10, 0, 10],
+                               atol=0.2)
+
+
+def test_centroids_sorted_and_assignments_nearest():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (512,)) * 3
+    res = kmeans_1d(key, x, k=3)
+    c = np.asarray(res.centroids)
+    assert (np.diff(c) >= 0).all()
+    a = np.asarray(res.assignments)
+    d = (np.asarray(x)[:, None] - c[None, :]) ** 2
+    np.testing.assert_array_equal(a, d.argmin(1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4]))
+def test_cost_not_worse_than_single_cluster(seed, k):
+    """k-means cost must be ≤ the k=1 (mean) cost — the paper's whole
+    premise: splitting narrows ranges."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,)) * jax.random.uniform(
+        jax.random.fold_in(key, 1), minval=0.1, maxval=10.0)
+    res = kmeans_1d(key, x, k=k)
+    cost1 = float(jnp.sum((x - jnp.mean(x)) ** 2))
+    assert float(res.cost) <= cost1 + 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_deterministic(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (128,))
+    r1 = kmeans_1d(key, x, k=3)
+    r2 = kmeans_1d(key, x, k=3)
+    np.testing.assert_array_equal(np.asarray(r1.centroids),
+                                  np.asarray(r2.centroids))
+
+
+def test_all_identical_points():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((64,), 2.5)
+    res = kmeans_1d(key, x, k=3)
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    assert float(res.cost) < 1e-6
+
+
+def test_cluster_ranges_narrower_than_total():
+    """The quantization-relevant property: per-cluster (max-min) < global."""
+    key = jax.random.PRNGKey(2)
+    x = jnp.concatenate([jax.random.normal(key, (900,)),
+                         20 + jax.random.normal(key, (50,)),
+                         -20 + jax.random.normal(key, (50,))])
+    res = kmeans_1d(key, x, k=3)
+    xs = np.asarray(x)
+    total = xs.max() - xs.min()
+    for c in range(3):
+        m = np.asarray(res.assignments) == c
+        if m.any():
+            assert xs[m].max() - xs[m].min() < total * 0.6

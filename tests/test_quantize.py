@@ -1,0 +1,97 @@
+"""Unit + property tests for the uniform quantizer (paper §3 eqs. 1-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QuantConfig, dequantize, fake_quant, qparams, quantize, value_range
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_code_range(bits):
+    cfg = QuantConfig(bits=bits)
+    x = jnp.linspace(-5, 7, 1000)
+    beta, alpha = value_range(x)
+    s, z = qparams(beta, alpha, cfg)
+    q = quantize(x, s, z, cfg)
+    assert int(q.min()) >= cfg.qmin
+    assert int(q.max()) <= cfg.qmax
+    # extremes map to extremes (full range used)
+    assert int(q.min()) == cfg.qmin
+    assert int(q.max()) == cfg.qmax
+
+
+def test_paper_formula_int8():
+    """S = (2^b - 1)/(α - β), Z = -2^(b-1) - INT(S·β)."""
+    cfg = QuantConfig(bits=8)
+    beta, alpha = jnp.float32(-1.0), jnp.float32(3.0)
+    s, z = qparams(beta, alpha, cfg)
+    assert np.isclose(float(s), 255.0 / 4.0)
+    assert np.isclose(float(z), -128 - round(255.0 / 4.0 * -1.0))
+
+
+def test_symmetric_zero_point():
+    cfg = QuantConfig(bits=8, symmetric=True)
+    s, z = qparams(jnp.float32(-2.0), jnp.float32(1.0), cfg)
+    assert float(z) == 0.0
+    # zero maps to zero exactly under symmetric quantization
+    q = quantize(jnp.zeros(4), s, z, cfg)
+    x = dequantize(q, s, z)
+    np.testing.assert_allclose(np.asarray(x), 0.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=2, max_size=256),
+       st.sampled_from([2, 4, 8]))
+def test_roundtrip_error_bound(vals, bits):
+    """|x - x̂| ≤ (α-β)/(2^b - 1) for in-range x (half-step rounding ⇒ one
+    full step is a safe bound, covering the clip at the code edges)."""
+    x = jnp.asarray(vals, jnp.float32)
+    cfg = QuantConfig(bits=bits)
+    xq = fake_quant(x, cfg)
+    span = float(jnp.max(x) - jnp.min(x))
+    step = span / (2 ** bits - 1) if span > 0 else 0.0
+    err = np.abs(np.asarray(xq) - np.asarray(x)).max()
+    assert err <= step + 1e-4 * max(1.0, span)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_monotonic(seed):
+    """Quantization must preserve ordering (monotone non-decreasing)."""
+    key = jax.random.PRNGKey(seed)
+    x = jnp.sort(jax.random.normal(key, (64,)) * 10)
+    cfg = QuantConfig(bits=4)
+    beta, alpha = value_range(x)
+    s, z = qparams(beta, alpha, cfg)
+    q = np.asarray(quantize(x, s, z, cfg))
+    assert (np.diff(q) >= 0).all()
+
+
+def test_percentile_clips_outlier():
+    x = jnp.concatenate([jnp.linspace(-1, 1, 999), jnp.asarray([1e4])])
+    beta, alpha = value_range(x, percentile=0.99)
+    assert float(alpha) < 10.0
+    assert float(beta) >= -1.0
+
+
+def test_degenerate_range():
+    cfg = QuantConfig(bits=2)
+    x = jnp.full((16,), 3.14)
+    xq = fake_quant(x, cfg)
+    assert np.isfinite(np.asarray(xq)).all()
+
+
+def test_per_channel_beats_per_tensor():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 32)) * jnp.linspace(0.01, 10, 32)
+    pt = fake_quant(w, QuantConfig(bits=4))
+    pc = fake_quant(w, QuantConfig(bits=4, per_channel=True),
+                    axis=(0,))
+    err_pt = float(jnp.mean((w - pt) ** 2))
+    err_pc = float(jnp.mean((w - pc) ** 2))
+    assert err_pc < err_pt

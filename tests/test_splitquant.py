@@ -1,0 +1,154 @@
+"""Core SplitQuant properties: the paper's mathematical-equivalence claim,
+resolution improvement, outlier preservation, stacked (scan) layouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QuantConfig, baseline_quant_tensor,
+                        split_activation_fake_quant, splitquant_tensor)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def outlier_weight(key, shape, scale=0.05, outliers=((0, 0, 3.0),)):
+    w = jax.random.normal(key, shape) * scale
+    for i, j, v in outliers:
+        w = w.at[i, j].set(v)
+    return w
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_split_layers_sum_equals_dequant(bits, k):
+    """Paper Fig. 2: Σ_c Ŵ_c == Ŵ exactly (mathematical equivalence)."""
+    w = outlier_weight(KEY, (64, 48))
+    sq = splitquant_tensor(KEY, w, QuantConfig(bits=bits), k=k)
+    total = sum(sq.split_layers())
+    np.testing.assert_array_equal(np.asarray(total),
+                                  np.asarray(sq.dequantize()))
+
+
+def test_split_masks_are_disjoint_and_cover():
+    w = outlier_weight(KEY, (32, 32))
+    sq = splitquant_tensor(KEY, w, QuantConfig(bits=2), k=3)
+    cid = np.asarray(sq.cid)
+    assert set(np.unique(cid)) <= {0, 1, 2}
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_splitquant_beats_baseline_with_outliers(bits):
+    """The paper's headline claim at low bits: splitting preserves both the
+    outliers and the bulk resolution."""
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (128, 128)) * 0.02
+    w = w.at[0, 0].set(5.0).at[3, 3].set(-4.0).at[7, 1].set(4.5)
+    cfg = QuantConfig(bits=bits)
+    sq = splitquant_tensor(key, w, cfg, k=3)
+    bl = baseline_quant_tensor(w, cfg)
+    mse_sq = float(jnp.mean((w - sq.dequantize()) ** 2))
+    mse_bl = float(jnp.mean((w - bl.dequantize()) ** 2))
+    assert mse_sq < mse_bl
+    # outlier reconstruction: splitquant must be dramatically closer
+    assert abs(float(sq.dequantize()[0, 0]) - 5.0) < \
+        abs(float(bl.dequantize()[0, 0]) - 5.0)
+
+
+def test_outliers_not_clipped_unlike_percentile():
+    key = jax.random.PRNGKey(8)
+    w = jax.random.normal(key, (128, 128)) * 0.02
+    w = w.at[0, 0].set(5.0)
+    cfg = QuantConfig(bits=4, percentile=0.99)
+    pc = baseline_quant_tensor(w, cfg)
+    sq = splitquant_tensor(key, w, QuantConfig(bits=4), k=3)
+    # percentile clip saturates the outlier far from 5.0
+    assert abs(float(pc.dequantize()[0, 0]) - 5.0) > 3.0
+    assert abs(float(sq.dequantize()[0, 0]) - 5.0) < 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]))
+def test_scale_factors_increase(seed, bits):
+    """§4: each split layer's scale S_c ≥ the unsplit scale (resolution
+    never decreases; strictly increases when ranges narrow)."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (64, 64))
+    cfg = QuantConfig(bits=bits)
+    sq = splitquant_tensor(key, w, cfg, k=3)
+    bl = baseline_quant_tensor(w, cfg)
+    assert float(jnp.min(sq.scale)) >= float(bl.scale[0]) * 0.999
+
+
+def test_stacked_matches_per_slice():
+    """Stacked (vmapped) quantization == quantizing each slice separately."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (4, 32, 24))
+    cfg = QuantConfig(bits=4)
+    stacked = splitquant_tensor(key, w, cfg, k=3, stack_dims=1)
+    keys = jax.random.split(key, 4)
+    for i in range(4):
+        single = splitquant_tensor(keys[i], w[i], cfg, k=3)
+        np.testing.assert_array_equal(np.asarray(stacked.q[i]),
+                                      np.asarray(single.q))
+        np.testing.assert_allclose(np.asarray(stacked.dequantize()[i]),
+                                   np.asarray(single.dequantize()),
+                                   rtol=1e-6)
+
+
+def test_stacked_slice_dequantizes_like_whole():
+    """Slicing leaves along the stack axis (what lax.scan does) and
+    dequantizing per slice == dequantizing the whole stacked tensor."""
+    import dataclasses
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (3, 16, 8))
+    sq = splitquant_tensor(key, w, QuantConfig(bits=2), k=3, stack_dims=1)
+    whole = np.asarray(sq.dequantize())
+    for i in range(3):
+        part = dataclasses.replace(sq, q=sq.q[i], cid=sq.cid[i],
+                                   scale=sq.scale[i], zero=sq.zero[i])
+        np.testing.assert_allclose(np.asarray(part.dequantize()), whole[i],
+                                   rtol=1e-6)
+
+
+def test_activation_split_matches_manual_chunks():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (4, 96))
+    cfg = QuantConfig(bits=8)
+    out = split_activation_fake_quant(x, cfg, n_chunks=3)
+    assert out.shape == x.shape
+    # per-chunk ranges ⇒ error within each chunk bounded by its own span
+    for c in range(3):
+        xc = np.asarray(x[:, c * 32:(c + 1) * 32])
+        oc = np.asarray(out[:, c * 32:(c + 1) * 32])
+        step = (xc.max() - xc.min()) / 255
+        assert np.abs(oc - xc).max() <= step + 1e-5
+
+
+def test_activation_split_improves_resolution_with_outlier():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (2, 96)) * 0.1
+    x = x.at[0, 0].set(100.0)          # outlier in chunk 0
+    cfg = QuantConfig(bits=4)
+    split = split_activation_fake_quant(x, cfg, n_chunks=3)
+    whole = split_activation_fake_quant(x, cfg, n_chunks=1)
+    # chunks 1,2 (no outlier) must be far better with the split
+    err_s = np.abs(np.asarray(split[:, 32:]) - np.asarray(x[:, 32:])).max()
+    err_w = np.abs(np.asarray(whole[:, 32:]) - np.asarray(x[:, 32:])).max()
+    assert err_s < err_w / 4
+
+
+def test_indivisible_activation_falls_back():
+    x = jnp.ones((2, 97))
+    out = split_activation_fake_quant(x, QuantConfig(bits=8), n_chunks=3)
+    assert out.shape == x.shape
+
+
+def test_deployed_bytes_accounting():
+    w = jnp.zeros((128, 128))
+    sq = splitquant_tensor(KEY, w, QuantConfig(bits=2), k=3)
+    n = 128 * 128
+    expected = (2 * n + 2 * n) // 8 + sq.scale.nbytes + sq.zero.nbytes
+    assert sq.nbytes_deployed() == expected
+    bl = baseline_quant_tensor(w, QuantConfig(bits=2))
+    assert bl.nbytes_deployed() < sq.nbytes_deployed()
