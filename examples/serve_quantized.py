@@ -1,8 +1,10 @@
-"""Quantized batched serving (the paper's deployment scenario): SplitQuant-
-preprocess + INT2 quantize a model, then serve a wave of requests and
-compare generations against the fp32 model.
+"""Quantized serving (the paper's deployment scenario), end to end on the
+continuous-batching engine: SplitQuant-preprocess + INT2 quantize the
+weights, serve the same requests with the fp32 and the quantized model,
+and compare generations — optionally with the KV cache itself stored INT8
+(SplitQuant §4.2 chunked ranges applied to activations-at-rest).
 
-    PYTHONPATH=src python examples/serve_quantized.py --bits 2
+    PYTHONPATH=src python examples/serve_quantized.py --bits 2 --kv-mode int8
 """
 import argparse
 import os
@@ -15,8 +17,8 @@ import numpy as np  # noqa: E402
 
 from repro.configs import get_arch  # noqa: E402
 from repro.core import QuantConfig, QuantPolicy, quantize_tree  # noqa: E402
+from repro.engine import Engine, EngineConfig  # noqa: E402
 from repro.models import get_model  # noqa: E402
-from repro.runtime.serve_loop import Request, ServeConfig, Server  # noqa: E402
 
 
 def main():
@@ -25,23 +27,28 @@ def main():
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"])
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = get_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key, cfg)
-    scfg = ServeConfig(max_batch=4, max_new_tokens=args.new_tokens,
-                       max_len=128)
+    ecfg = EngineConfig(max_len=128, n_slots=4,
+                        max_new_tokens=args.new_tokens,
+                        kv_mode=args.kv_mode)
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10))
                for _ in range(args.requests)]
 
     def generate(p, label):
-        srv = Server(cfg, p, scfg)
-        reqs = [Request(i, pr.copy()) for i, pr in enumerate(prompts)]
-        out = srv.serve(reqs)
-        print(f"-- {label}")
+        eng = Engine(cfg, p, ecfg)
+        for pr in prompts:
+            eng.submit(pr.copy())
+        out = eng.drain()
+        m = eng.metrics()
+        print(f"-- {label}  ({m['tokens_per_s']:.1f} tok/s, "
+              f"kv={m['kv_mode']})")
         for r in out[:3]:
             print(f"   req {r.uid}: {r.out}")
         return [tuple(r.out) for r in out]

@@ -1,0 +1,22 @@
+"""Continuous-batching inference engine (DESIGN.md §6).
+
+`kvcache` and `scheduler` are dependency-light and import eagerly;
+`Engine` pulls in the model zoo, so it is resolved lazily to keep the
+models ← engine.kvcache edge (attention's slot-cache branch) acyclic.
+"""
+from __future__ import annotations
+
+from .kvcache import (SlotKVCache, clear_slot, dequantize_kv,
+                      init_slot_cache, quantize_kv, write_prefill)
+from .scheduler import EngineRequest, Scheduler
+
+__all__ = ["Engine", "EngineConfig", "EngineRequest", "Scheduler",
+           "SlotKVCache", "init_slot_cache", "write_prefill", "clear_slot",
+           "quantize_kv", "dequantize_kv"]
+
+
+def __getattr__(name):
+    if name in ("Engine", "EngineConfig"):
+        from . import engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

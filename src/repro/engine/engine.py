@@ -1,0 +1,221 @@
+"""Continuous-batching inference engine.
+
+`Engine` owns the three serving pieces: a `Scheduler` (FCFS queue + slot
+pool), a `SlotKVCache` (preallocated, optionally INT8), and the jitted
+model entry points. The serving loop is token-level:
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=4))
+    eng.submit(prompt_a); eng.submit(prompt_b)
+    finished = eng.drain()
+
+Each `step()` (1) admits queued requests into free slots — every admit is
+a per-request prefill (batch 1, right-padded to a length bucket so jit
+recompiles are bounded; padding never pollutes the cache because only the
+true prompt positions are marked valid); (2) runs ONE batched decode step
+over all slots at their own positions; (3) retires finished slots so the
+next step can refill them. A long generation therefore occupies exactly
+one slot instead of stalling a whole wave.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+
+from .kvcache import clear_slot, init_slot_cache, write_prefill
+from .scheduler import EngineRequest, Scheduler
+
+ENGINE_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 8
+    max_len: int = 256
+    max_new_tokens: int = 32            # default per-request token budget
+    temperature: float = 0.0            # 0 ⇒ greedy
+    eos_id: int = -1                    # -1 ⇒ never stop early
+    kv_mode: str = "fp"                 # "fp" | "int8" (SplitQuant §4.2)
+    kv_qchunks: int = 4                 # ranges per head-vector in int8 mode
+    kv_dtype: str = "float32"           # fp-mode storage; "bfloat16" on TPU
+    prefill_bucket: int = 16            # prompt lengths round up to a multiple
+
+
+class Engine:
+    """submit()/step()/drain() continuous-batching server."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig,
+                 rng: Optional[jax.Array] = None,
+                 clock=time.perf_counter):
+        if cfg.family not in ENGINE_FAMILIES:
+            raise NotImplementedError(
+                f"engine serves transformer families {ENGINE_FAMILIES}, "
+                f"got {cfg.family!r} (recurrent-state continuous batching "
+                f"is a separate cache layout)")
+        if cfg.window is not None and cfg.window < ecfg.max_len:
+            raise NotImplementedError(
+                "windowed (ring) slot caches not wired up yet; "
+                f"window={cfg.window} < max_len={ecfg.max_len}")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.model = get_model(cfg)
+        self.clock = clock
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        from repro.models.common import dtype_of
+        self.sched = Scheduler(ecfg.n_slots, clock=clock)
+        self.cache = init_slot_cache(
+            cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
+            dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks)
+        from repro.models import transformer
+        self._decode = jax.jit(lambda p, c, t, pos:
+                               transformer.decode_step_slots(p, cfg, c, t, pos))
+        self._prefill = jax.jit(lambda p, toks:
+                                self.model.prefill(p, cfg, {"tokens": toks}))
+        # slot and length stay traced: one compile per prefill bucket shape
+        self._write = jax.jit(write_prefill)
+        self._clear = jax.jit(clear_slot)
+        # host-side slot state
+        N = ecfg.n_slots
+        self._last_tok = np.zeros(N, np.int32)
+        self._pos = np.zeros(N, np.int32)
+        self._uid = 0
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+        self._t_start: Optional[float] = None
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
+        """Enqueue a request; returns its uid. Non-blocking — work happens
+        in step()/drain(). An explicit max_new_tokens=0 means "no tokens"
+        (the request completes at admission with empty output)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} > max_len {self.ecfg.max_len}")
+        budget = (self.ecfg.max_new_tokens if max_new_tokens is None
+                  else max_new_tokens)
+        if len(prompt) + budget > self.ecfg.max_len:
+            budget = max(1, self.ecfg.max_len - len(prompt))
+        req = EngineRequest(uid=self._uid, prompt=prompt,
+                            max_new_tokens=budget)
+        self._uid += 1
+        self.sched.submit(req)
+        return req.uid
+
+    # ---------------------------------------------------------- sampling --
+    def _sample(self, logits):
+        """logits (..., V) → token ids."""
+        if self.ecfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(k, logits / self.ecfg.temperature)
+
+    # ----------------------------------------------------------- serving --
+    def _bucket(self, n: int) -> int:
+        b = self.ecfg.prefill_bucket
+        return min(self.ecfg.max_len, -(-n // b) * b)
+
+    def _retire(self, slot: int):
+        """Free the slot everywhere: scheduler, cache row (kv_pos → -1),
+        and host-side position/token state, so idle slots genuinely ride
+        along at pos 0."""
+        self.sched.retire(slot)
+        self.cache = self._clear(self.cache, jnp.int32(slot))
+        self._pos[slot] = 0
+        self._last_tok[slot] = 0
+
+    def _admit_one(self, slot: int, req: EngineRequest):
+        if req.max_new_tokens <= 0:                   # explicit 0-token ask
+            req.t_first_token = req.t_submit
+            self.sched.retire(slot)
+            return
+        S = len(req.prompt)
+        Sp = self._bucket(S)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :S] = req.prompt                      # right-pad
+        logits, pcache = self._prefill(self.params, jnp.asarray(toks))
+        self.n_prefills += 1
+        # only [0, S) becomes visible; bucket padding stays masked forever
+        self.cache = self._write(self.cache, jnp.int32(slot), pcache,
+                                 jnp.int32(S))
+        first = int(self._sample(logits[0, S - 1]))
+        req.t_first_token = self.clock()
+        if first == self.ecfg.eos_id:                 # eos is never emitted
+            self._retire(slot)
+            return
+        req.out.append(first)
+        self._last_tok[slot] = first
+        self._pos[slot] = S
+        if len(req.out) >= req.max_new_tokens or S >= self.ecfg.max_len:
+            self._retire(slot)
+
+    def step(self) -> list[EngineRequest]:
+        """Admit + one batched decode step. Returns requests finishing now."""
+        if self._t_start is None:
+            self._t_start = self.clock()
+        n_done_before = len(self.sched.finished)
+        for slot, req in self.sched.admit():
+            self._admit_one(slot, req)
+        active = self.sched.active_slots()
+        if active:
+            # idle slots ride along at pos 0 with token 0 (fixed decode
+            # shape == jit cache of exactly one entry); _retire cleared
+            # their kv_pos rows, so each idle step re-marks only its own
+            # t=0 entry, and the next admit rewrites the row wholesale
+            tokens = jnp.asarray(self._last_tok[:, None])
+            pos = jnp.asarray(self._pos)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens, pos)
+            self.n_decode_steps += 1
+            toks = np.asarray(self._sample(logits[:, -1]))
+            for slot in active:
+                req = self.sched.slots[slot]
+                t = int(toks[slot])
+                self._pos[slot] += 1
+                if t == self.ecfg.eos_id:
+                    self._retire(slot)
+                    continue
+                req.out.append(t)
+                self._last_tok[slot] = t
+                if (len(req.out) >= req.max_new_tokens
+                        or self._pos[slot] >= self.ecfg.max_len):
+                    self._retire(slot)
+            self.sched.note_step(len(active))
+        return self.sched.finished[n_done_before:]
+
+    def drain(self) -> list[EngineRequest]:
+        """Run until queue and slots are empty; returns all finished
+        requests in uid order."""
+        while not self.sched.idle:
+            self.step()
+        return sorted(self.sched.finished, key=lambda r: r.uid)
+
+    # ----------------------------------------------------------- metrics --
+    def metrics(self) -> dict:
+        fin = self.sched.finished
+        ttfts = [r.ttft for r in fin if r.ttft is not None]
+        tps = [r.tokens_per_s for r in fin if r.tokens_per_s is not None]
+        total_tokens = sum(len(r.out) for r in fin)
+        wall = (self.clock() - self._t_start) if self._t_start else 0.0
+        return {
+            "n_finished": len(fin),
+            "total_tokens": total_tokens,
+            "wall_s": wall,
+            "tokens_per_s": total_tokens / wall if wall > 0 else None,
+            "decode_steps": self.n_decode_steps,
+            "prefills": self.n_prefills,
+            "slot_utilization": self.sched.utilization(),
+            "queue_depth_max": max(self.sched.queue_depth_hist, default=0),
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
+            "ttft_p50_s": float(np.median(ttfts)) if ttfts else None,
+            "request_tokens_per_s_mean": float(np.mean(tps)) if tps else None,
+            "kv_mode": self.cache.mode,
+            "kv_bytes_per_token": self.cache.bytes_per_token(),
+        }

@@ -1,0 +1,232 @@
+"""Slot-indexed KV cache for the continuous-batching engine.
+
+Layout (DESIGN.md §6): all serving state lives in preallocated arrays of
+shape (L, N, T, Hkv, D) — N fixed slots, T = max sequence length. A slot
+holds one request for its whole lifetime; `kv_pos[l, n, t]` records the
+absolute position stored at time-index t (-1 = empty), so slots with
+different prompt lengths coexist in one batched decode step and padding
+never enters attention (invalid entries are masked by position, exactly
+like the ring-buffer windows in `models/attention.py`).
+
+Quantized storage (``mode="int8"``): SplitQuant §4.2 applied to
+activations-at-rest. Each written K/V head-vector is split into
+``qchunks`` sub-channel chunks and every chunk is quantized INT8 with its
+own dynamic range (β, α) → (scale, zero) via the paper's eqs. (1)-(3).
+Separate per-chunk ranges are the paper's mechanism for keeping outlier
+channels from inflating everyone else's quantization step; unlike the
+weight path (k-means cid per element, offline) the serving write sits on
+the decode critical path, so chunk membership is fixed (contiguous
+sub-channels) rather than value-clustered — no cid tensor, and dequant is
+a reshape + broadcast. Codes are dequantized on read inside attention.
+
+Storage cost per element: 1 byte of codes + 8·qchunks/D bytes of fp32
+(scale, zero) — for D=64, qchunks=4 that is 1.5 B/elt vs 2 B (bf16) or
+4 B (fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantConfig, dequantize, qparams, quantize, \
+    value_range
+
+KV_QCFG = QuantConfig(bits=8, symmetric=False)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("k", "v", "kv_pos", "k_scale", "k_zero",
+                                "v_scale", "v_zero"),
+                   meta_fields=("mode", "qchunks"))
+@dataclasses.dataclass
+class SlotKVCache:
+    """Slot-indexed decode cache (one layer stack, or one layer inside
+    `jax.lax.scan` — every data leaf carries the same leading axes, so
+    scanning the dataclass over L yields per-layer `SlotKVCache` slices).
+
+    mode="fp":   k/v (L, N, T, Hkv, D) in a float dtype; scales are
+                 zero-size placeholders (shape (L, N, T, Hkv, 0)).
+    mode="int8": k/v int8 codes; {k,v}_{scale,zero} (L, N, T, Hkv, C)
+                 fp32, C = qchunks contiguous sub-channel chunks per head.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    kv_pos: jnp.ndarray          # (L, N, T) int32, -1 = empty
+    k_scale: jnp.ndarray
+    k_zero: jnp.ndarray
+    v_scale: jnp.ndarray
+    v_zero: jnp.ndarray
+    mode: str = "fp"
+    qchunks: int = 4
+
+    @property
+    def n_slots(self) -> int:
+        return self.k.shape[-4]
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[-3]
+
+    def bytes_per_token(self) -> float:
+        """Storage bytes per cached token per layer (both K and V)."""
+        Hkv, D = self.k.shape[-2], self.k.shape[-1]
+        per_elt = self.k.dtype.itemsize
+        per_chunk = 2 * 4 * self.k_scale.shape[-1]      # scale+zero fp32
+        return 2 * (Hkv * D * per_elt + Hkv * per_chunk)
+
+
+def init_slot_cache(cfg, n_slots: int, max_len: int, *, mode: str = "fp",
+                    dtype=jnp.float32, qchunks: int = 4) -> SlotKVCache:
+    """Preallocate the engine cache for a transformer-family config."""
+    if mode not in ("fp", "int8"):
+        raise ValueError(f"unknown KV cache mode {mode!r}")
+    L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    if mode == "int8" and D % qchunks:
+        raise ValueError(f"head_dim {D} not divisible by qchunks {qchunks}")
+    shape = (L, n_slots, max_len, Hkv, D)
+    C = qchunks if mode == "int8" else 0
+    sshape = (L, n_slots, max_len, Hkv, C)
+    kv_dtype = jnp.int8 if mode == "int8" else dtype
+    # scales init to 1 (not 0): unwritten entries must dequantize to a
+    # finite 0, because masked-out attention rows still flow through the
+    # p·V einsum where 0·NaN would poison the output.
+    one = functools.partial(jnp.ones, dtype=jnp.float32)
+    zero = functools.partial(jnp.zeros, dtype=jnp.float32)
+    return SlotKVCache(
+        k=jnp.zeros(shape, kv_dtype), v=jnp.zeros(shape, kv_dtype),
+        kv_pos=jnp.full((L, n_slots, max_len), -1, jnp.int32),
+        k_scale=one(sshape), k_zero=zero(sshape),
+        v_scale=one(sshape), v_zero=zero(sshape),
+        mode=mode, qchunks=qchunks)
+
+
+# ----------------------------------------------------------- quant core ---
+def quantize_kv(x: jnp.ndarray, qchunks: int):
+    """x (..., Hkv, D) → (codes int8 (..., Hkv, D), scale, zero (..., Hkv, C)).
+
+    Per-chunk dynamic ranges: split D into C contiguous chunks, each gets
+    its own (β, α) → (S, Z).
+    """
+    *lead, H, D = x.shape
+    xc = x.reshape(*lead, H, qchunks, D // qchunks)
+    beta, alpha = value_range(xc, axis=-1)
+    scale, zero = qparams(beta, alpha, KV_QCFG)
+    q = quantize(xc, scale[..., None], zero[..., None], KV_QCFG)
+    return q.reshape(x.shape), scale, zero
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """codes (..., Hkv, D), scale/zero (..., Hkv, C) → x̂ (..., Hkv, D)."""
+    *lead, H, D = q.shape
+    C = scale.shape[-1]
+    qc = q.reshape(*lead, H, C, D // C)
+    x = dequantize(qc, scale[..., None], zero[..., None], dtype)
+    return x.reshape(q.shape)
+
+
+# ----------------------------------------------- per-layer decode update ---
+def slot_layer_update(cl: SlotKVCache, k_new, v_new, positions):
+    """One decode-step cache update for ONE layer (called from
+    `attention_block` inside the layer scan).
+
+    cl: per-layer slice — leaves (N, T, Hkv, D) / (N, T, Hkv, C) / (N, T).
+    k_new/v_new: (N, 1, Hkv, D) post-RoPE. positions: (N, 1) int32 absolute
+    per-slot positions (the time-index written is positions % T, though the
+    engine never wraps — it retires at max_len).
+    Returns (k_full, v_full, kv_pos, new_cl) with k_full/v_full (N, T, Hkv,
+    D) in compute precision and kv_pos (N, T).
+    """
+    T = cl.k.shape[-3]
+    slot_t = (positions[:, 0] % T).astype(jnp.int32)       # (N,)
+
+    def upd(buf, new, t):
+        return jax.lax.dynamic_update_slice(
+            buf, new.astype(buf.dtype), (t,) + (0,) * (buf.ndim - 1))
+
+    if cl.mode == "int8":
+        qk, ks, kz = quantize_kv(k_new, cl.qchunks)        # (N,1,H,D)/(N,1,H,C)
+        qv, vs, vz = quantize_kv(v_new, cl.qchunks)
+        new_cl = dataclasses.replace(
+            cl,
+            k=jax.vmap(upd)(cl.k, qk, slot_t),
+            v=jax.vmap(upd)(cl.v, qv, slot_t),
+            k_scale=jax.vmap(upd)(cl.k_scale, ks, slot_t),
+            k_zero=jax.vmap(upd)(cl.k_zero, kz, slot_t),
+            v_scale=jax.vmap(upd)(cl.v_scale, vs, slot_t),
+            v_zero=jax.vmap(upd)(cl.v_zero, vz, slot_t),
+            kv_pos=jax.vmap(upd)(cl.kv_pos, positions.astype(jnp.int32),
+                                 slot_t))
+        k_full = dequantize_kv(new_cl.k, new_cl.k_scale, new_cl.k_zero,
+                               k_new.dtype)
+        v_full = dequantize_kv(new_cl.v, new_cl.v_scale, new_cl.v_zero,
+                               v_new.dtype)
+    else:
+        new_cl = dataclasses.replace(
+            cl,
+            k=jax.vmap(upd)(cl.k, k_new, slot_t),
+            v=jax.vmap(upd)(cl.v, v_new, slot_t),
+            kv_pos=jax.vmap(upd)(cl.kv_pos, positions.astype(jnp.int32),
+                                 slot_t))
+        k_full = new_cl.k.astype(k_new.dtype)
+        v_full = new_cl.v.astype(v_new.dtype)
+    return k_full, v_full, new_cl.kv_pos, new_cl
+
+
+# ------------------------------------------------------ slot management ---
+def write_prefill(cache: SlotKVCache, slot: int, prefill_cache,
+                  length: int) -> SlotKVCache:
+    """Insert a single request's prefill KV (a standard `models.KVCache`
+    with batch 1, k/v (L, 1, S, Hkv, D)) into slot `slot`.
+
+    Only positions [0, length) become visible; the slot's whole kv_pos row
+    is rewritten, so stale state from the slot's previous occupant (and any
+    right-padding the prefill bucket added) is invalidated in one write.
+    """
+    k, v = prefill_cache.k[:, 0], prefill_cache.v[:, 0]    # (L, S, Hkv, D)
+    L, S, H, D = k.shape
+    T = cache.max_len
+    if S > T:
+        raise ValueError(f"prefill length {S} exceeds cache max_len {T}")
+    if S < T:
+        pad = [(0, 0), (0, T - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    t = jnp.arange(T, dtype=jnp.int32)
+    pos_row = jnp.where(t < length, t, -1)                 # (T,)
+    pos_row = jnp.broadcast_to(pos_row, (L, T))
+
+    def put(buf, row):
+        idx = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(
+            buf, row[:, None].astype(buf.dtype), idx)
+
+    if cache.mode == "int8":
+        qk, ks, kz = quantize_kv(k, cache.qchunks)
+        qv, vs, vz = quantize_kv(v, cache.qchunks)
+        return dataclasses.replace(
+            cache, k=put(cache.k, qk), v=put(cache.v, qv),
+            k_scale=put(cache.k_scale, ks), k_zero=put(cache.k_zero, kz),
+            v_scale=put(cache.v_scale, vs), v_zero=put(cache.v_zero, vz),
+            kv_pos=put(cache.kv_pos, pos_row))
+    return dataclasses.replace(
+        cache, k=put(cache.k, k), v=put(cache.v, v),
+        kv_pos=put(cache.kv_pos, pos_row))
+
+
+def clear_slot(cache: SlotKVCache, slot: int) -> SlotKVCache:
+    """Mark a slot empty (retire). K/V bytes are left in place — kv_pos=-1
+    masks them, and the next write_prefill overwrites the row."""
+    row = jnp.full((cache.kv_pos.shape[0], cache.max_len), -1, jnp.int32)
+    return dataclasses.replace(
+        cache, kv_pos=jax.lax.dynamic_update_slice(
+            cache.kv_pos, row[:, None], (0, slot, 0)))
+
+
+def slice_layers(cache: SlotKVCache, lo: int, hi: int) -> SlotKVCache:
+    """Layer-range view, mirroring `forward`'s dense/MoE stack split."""
+    return jax.tree_util.tree_map(lambda x: x[lo:hi], cache)

@@ -1,0 +1,114 @@
+"""Token-level continuous-batching scheduler: FCFS admission into a fixed
+pool of N slots, per-step retire/refill.
+
+The scheduler is pure-Python bookkeeping — it never touches device arrays.
+The engine asks it three questions per step: which queued requests can be
+admitted into free slots (`admit`), which slots are active (`active_slots`),
+and it reports terminations back (`retire`). Replacing the wave-synchronous
+loop, a finished request frees its slot immediately, so one long generation
+no longer stalls the short requests batched with it.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    """One generation request and its lifecycle metrics."""
+
+    uid: int
+    prompt: "object"                    # (S,) int array-like
+    max_new_tokens: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    # metrics (perf_counter seconds; None until the event happens)
+    t_submit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_submit is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_done is None or not self.out:
+            return None
+        dt = self.t_done - self.t_submit
+        return len(self.out) / dt if dt > 0 else None
+
+
+class Scheduler:
+    """FCFS queue + fixed slot pool."""
+
+    def __init__(self, n_slots: int, clock=time.perf_counter):
+        self.n_slots = n_slots
+        self.clock = clock
+        self.queue: collections.deque[EngineRequest] = collections.deque()
+        self.slots: list[Optional[EngineRequest]] = [None] * n_slots
+        self.finished: list[EngineRequest] = []
+        # counters for the engine's metrics snapshot
+        self.n_submitted = 0
+        self.n_admitted = 0
+        self.queue_depth_hist: list[int] = []
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, req: EngineRequest) -> EngineRequest:
+        req.t_submit = self.clock()
+        self.queue.append(req)
+        self.n_submitted += 1
+        return req
+
+    # ---------------------------------------------------------- stepping --
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def admit(self) -> list[tuple[int, EngineRequest]]:
+        """Move queued requests into free slots (FCFS). Returns the
+        (slot, request) pairs admitted this step; the engine prefills them."""
+        placed = []
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.slots[slot] = req
+            self.n_admitted += 1
+            placed.append((slot, req))
+        self.queue_depth_hist.append(len(self.queue))
+        return placed
+
+    def retire(self, slot: int) -> EngineRequest:
+        """Free a slot whose request finished (eos or token budget)."""
+        req = self.slots[slot]
+        assert req is not None, f"retire of empty slot {slot}"
+        req.done = True
+        req.t_done = self.clock()
+        self.slots[slot] = None
+        self.finished.append(req)
+        return req
+
+    # ------------------------------------------------------------- state --
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    def utilization(self) -> float:
+        """Mean fraction of slots active over recorded steps (set by the
+        engine via `note_step`)."""
+        if not getattr(self, "_active_hist", None):
+            return 0.0
+        return sum(self._active_hist) / (len(self._active_hist) * self.n_slots)
+
+    def note_step(self, n_active: int):
+        if not hasattr(self, "_active_hist"):
+            self._active_hist = []
+        self._active_hist.append(n_active)

@@ -1,8 +1,12 @@
 """Quantized serving driver: SplitQuant-preprocess a model's weights, low-
-bit quantize, and serve batched requests (the paper's deployment story).
+bit quantize, and serve requests (the paper's deployment story).
+
+Default path is the continuous-batching engine (`repro.engine`) with an
+optionally INT8-quantized KV cache; `--wave` selects the legacy wave-
+synchronous loop for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-        --reduced --bits 2 --method splitquant --requests 4
+        --reduced --bits 2 --method splitquant --requests 4 --kv-mode int8
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import QuantConfig, QuantPolicy, quantize_tree
+from repro.engine import Engine, EngineConfig
 from repro.models import get_model
 from repro.runtime.serve_loop import Request, ServeConfig, Server
 
@@ -26,6 +31,13 @@ def main():
                     choices=["splitquant", "baseline", "percentile", "none"])
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--wave", action="store_true",
+                    help="use the legacy wave-batching loop")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine slot count / wave max_batch")
+    ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"],
+                    help="engine KV cache storage (int8 = SplitQuant §4.2 "
+                         "chunked-range quantization of K/V at rest)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     args = ap.parse_args()
@@ -50,14 +62,36 @@ def main():
               f"{report['deployed_bytes']/2**20:.1f} MiB vs fp32 "
               f"{report['orig_bytes']/2**20:.1f} MiB")
 
-    srv = Server(cfg, params, ServeConfig(
-        max_batch=4, max_new_tokens=args.max_new_tokens, max_len=256))
     rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab, size=rng.integers(4, 12)))
-            for i in range(args.requests)]
-    out = srv.serve(reqs)
-    for r in out:
-        print(f"req {r.uid}: {len(r.out)} tokens -> {r.out[:12]}")
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
+               for _ in range(args.requests)]
+
+    from repro.engine.engine import ENGINE_FAMILIES
+    if not args.wave and cfg.family not in ENGINE_FAMILIES:
+        print(f"note: {cfg.family!r} family has no slot-cache layout yet; "
+              f"serving with the wave loop")
+        args.wave = True
+    if args.wave:
+        srv = Server(cfg, params, ServeConfig(
+            max_batch=args.slots, max_new_tokens=args.max_new_tokens,
+            max_len=256))
+        out = srv.serve([Request(i, p) for i, p in enumerate(prompts)])
+        for r in out:
+            print(f"req {r.uid}: {len(r.out)} tokens -> {r.out[:12]}")
+        return
+
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=args.slots, max_len=256,
+        max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode))
+    for p in prompts:
+        eng.submit(p)
+    for r in eng.drain():
+        print(f"req {r.uid}: {len(r.out)} tokens -> {r.out[:12]}  "
+              f"(ttft {r.ttft*1e3:.0f} ms, {r.tokens_per_s:.1f} tok/s)")
+    m = eng.metrics()
+    print(f"engine: {m['tokens_per_s']:.1f} tok/s, "
+          f"util {m['slot_utilization']:.0%}, kv={m['kv_mode']} "
+          f"({m['kv_bytes_per_token']:.0f} B/token/layer)")
 
 
 if __name__ == "__main__":

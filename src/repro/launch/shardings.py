@@ -150,6 +150,9 @@ def cache_shardings(cache, mesh) -> Any:
                 s = [None, dp, tp, None, None]
             return NamedSharding(mesh, _guard(shape, s, mesh))
         elif nd == 3:
+            if jnp.issubdtype(leaf.dtype, jnp.integer):
+                # (L, B, T) per-request slot_pos / engine kv_pos: batch only
+                return NamedSharding(mesh, _guard(shape, s, mesh))
             s[-1] = tp                   # (L, B, r) recurrent state width
         return NamedSharding(mesh, _guard(shape, s, mesh))
 

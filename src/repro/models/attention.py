@@ -25,16 +25,28 @@ class KVCache(NamedTuple):
     slot t (-1 = empty)."""
     k: jnp.ndarray          # (L, B, T, Hkv, D)
     v: jnp.ndarray          # (L, B, T, Hkv, D)
-    slot_pos: jnp.ndarray   # (L, T) int32
+    slot_pos: jnp.ndarray   # (L, T) int32 — or (L, B, T) when positions
+                            # are per-request (padded prefill)
+
+
+def _is_slot_cache(cache_layer) -> bool:
+    """Duck-typed check for a per-layer `engine.kvcache.SlotKVCache` slice
+    (imported lazily in the hot path to keep models ← engine acyclic)."""
+    return hasattr(cache_layer, "kv_pos") and hasattr(cache_layer, "mode")
 
 
 def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
-    """(S, T) boolean validity. kv_pos may contain -1 (empty ring slots)."""
-    m = kv_pos[None, :] >= 0
+    """Boolean validity, always (B|1, S, T). kv_pos may contain -1 (empty
+    ring slots / padding). q_pos (S,) or (B, S); kv_pos (T,) or (B, T) —
+    the batched forms carry per-request positions (engine slots, pad
+    masks)."""
+    q = jnp.atleast_2d(q_pos)            # (Bq, S)
+    kv = jnp.atleast_2d(kv_pos)          # (Bk, T)
+    m = kv[:, None, :] >= 0
     if causal:
-        m &= kv_pos[None, :] <= q_pos[:, None]
+        m = m & (kv[:, None, :] <= q[:, :, None])
     if window is not None:
-        m &= kv_pos[None, :] > q_pos[:, None] - window
+        m = m & (kv[:, None, :] > q[:, :, None] - window)
     return m
 
 
@@ -75,8 +87,8 @@ def attend(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
         v = shard_hint(expand(v), "dp", None, "tp", None)
         s = jnp.einsum("bshd,bthd->bsht", qs, k,
                        preferred_element_type=jnp.float32)
-        m = _mask(q_pos, kv_pos, causal, window)           # (S, T)
-        s = jnp.where(m[None, :, None, :], s, NEG_INF)
+        m = _mask(q_pos, kv_pos, causal, window)           # (B|1, S, T)
+        s = jnp.where(m[:, :, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         o = jnp.einsum("bsht,bthd->bshd", p, v,
                        preferred_element_type=jnp.float32)
@@ -86,7 +98,10 @@ def attend(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
     assert T % kv_chunk == 0, (T, kv_chunk)
     kc = k.reshape(B, n_chunks, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(B, n_chunks, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
-    pc = kv_pos.reshape(n_chunks, kv_chunk)
+    if kv_pos.ndim == 1:
+        pc = kv_pos.reshape(n_chunks, kv_chunk)
+    else:                                # batched positions (B, T)
+        pc = kv_pos.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
 
     def step(carry, xs):
         m_run, l_run, acc = carry
@@ -97,7 +112,7 @@ def attend(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
                        preferred_element_type=jnp.float32)   # (B,S,Hq,c)
         s = shard_hint(s, "dp", None, "tp", None)
         msk = _mask(q_pos, p_i, causal, window)
-        s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+        s = jnp.where(msk[:, :, None, :], s, NEG_INF)
         m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
         corr = jnp.exp(m_run - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -132,7 +147,9 @@ def tshard_decode_attend(q, k, v, q_pos, kv_pos, *, window=None):
     from jax.sharding import PartitionSpec as P
 
     mesh = _mesh_lib.thread_resources.env.physical_mesh
-    if mesh.empty or "model" not in mesh.axis_names:
+    if mesh.empty or "model" not in mesh.axis_names or kv_pos.ndim > 1:
+        # batched (per-request) kv_pos carries no single time shard; the
+        # engine path never runs time-sharded, so fall back
         return attend(q, k, v, q_pos, kv_pos, causal=True, window=window)
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     import math
@@ -152,8 +169,8 @@ def tshard_decode_attend(q, k, v, q_pos, kv_pos, *, window=None):
                                   (Bl, Tl, Hkv, G, D)).reshape(Bl, Tl, Hq, D)
         s = jnp.einsum("bshd,bthd->bsht", (qb * D ** -0.5).astype(qb.dtype),
                        kb, preferred_element_type=jnp.float32)
-        msk = _mask(qp, pb, True, window)                  # (1, Tl)
-        s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+        msk = _mask(qp, pb, True, window)                  # (1, 1, Tl)
+        s = jnp.where(msk[:, :, None, :], s, NEG_INF)
         m = jnp.max(s, axis=-1)                            # (Bl,1,Hq)
         p = jnp.exp(s - m[..., None])
         l = jnp.sum(p, axis=-1)
@@ -177,15 +194,20 @@ def tshard_decode_attend(q, k, v, q_pos, kv_pos, *, window=None):
 
 def attention_block(p, x, cfg, positions, cache_layer=None, *,
                     causal=True, window=None, kv_chunk=None,
-                    cross_kv=None, want_kv=False, tshard_decode=False):
+                    cross_kv=None, want_kv=False, tshard_decode=False,
+                    kv_pos_override=None):
     """Full attention sub-layer: projections + RoPE + (cache) + attend + out.
 
     p: {"wq","wk","wv","wo"(,biases)}; x: (B, S, d).
-    cache_layer: (k, v, slot_pos) for this layer (decode) or None.
+    cache_layer: (k, v, slot_pos) for this layer (decode), a per-layer
+    `engine.kvcache.SlotKVCache` slice (slot decode with per-request
+    positions — `positions` is then (B, 1)), or None.
     cross_kv: precomputed (k, v, kv_pos) for encoder-decoder cross-attention
     (projections wk/wv already applied by the caller).
     want_kv: with no cache, also return this call's post-RoPE (k, v) so the
     caller can assemble a prefill cache.
+    kv_pos_override: (B, S) per-request KV validity positions for prefill
+    with padding (-1 = pad token; masked out of attention).
     Returns (out, new_cache_layer | (k, v) | None).
     """
     B, S, _ = x.shape
@@ -203,14 +225,28 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
     new_cache = None
     if cross_kv is not None:
         k, v, kv_pos = cross_kv
+    elif _is_slot_cache(cache_layer):
+        # engine slot cache: per-request positions (B, 1), quant-aware
+        from repro.engine.kvcache import slot_layer_update
+        k, v, kv_pos, new_cache = slot_layer_update(
+            cache_layer, k, v, positions)
+        o = attend(q, k, v, positions, kv_pos, causal=causal, window=window,
+                   kv_chunk=kv_chunk)
+        out = dense(o.reshape(B, S, Hq * D), p["wo"], p.get("bo"))
+        return shard_hint(out, "dp", None, None), new_cache
     elif cache_layer is not None:
         ck, cv, slot_pos = cache_layer
         T = ck.shape[1]
         slot = positions[0] % T                     # ring slot (window) or abs
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
-        slot_pos = jax.lax.dynamic_update_slice(
-            slot_pos, positions.astype(jnp.int32), (slot,))
+        if slot_pos.ndim == 1:                      # shared positions (T,)
+            slot_pos = jax.lax.dynamic_update_slice(
+                slot_pos, positions.astype(jnp.int32), (slot,))
+        else:                                       # per-request (B, T)
+            upd = jnp.broadcast_to(positions.astype(jnp.int32),
+                                   (slot_pos.shape[0], 1))
+            slot_pos = jax.lax.dynamic_update_slice(slot_pos, upd, (0, slot))
         k, v, kv_pos = ck.astype(x.dtype), cv.astype(x.dtype), slot_pos
         new_cache = (ck, cv, slot_pos)
         if tshard_decode and S == 1:
@@ -219,7 +255,7 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
             out = dense(o.reshape(B, S, Hq * D), p["wo"], p.get("bo"))
             return shard_hint(out, "dp", None, None), new_cache
     else:
-        kv_pos = positions
+        kv_pos = positions if kv_pos_override is None else kv_pos_override
         if want_kv:
             new_cache = (k, v)
 

@@ -68,13 +68,14 @@ def init(key, cfg):
 
 def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
                  kv_chunk, want_kv: bool, moe_blocks: int = 1,
-                 tshard_decode: bool = False):
+                 tshard_decode: bool = False, kv_pos_override=None):
     x = shard_hint(x, "dp", None, None)
     h = apply_norm(x, p["ln1"], cfg.norm_type)
     attn_out, kv = attention_block(
         p["attn"], h, cfg, positions, cache_layer,
         causal=cfg.family != "encoder", window=cfg.window,
-        kv_chunk=kv_chunk, want_kv=want_kv, tshard_decode=tshard_decode)
+        kv_chunk=kv_chunk, want_kv=want_kv, tshard_decode=tshard_decode,
+        kv_pos_override=kv_pos_override)
     x = x + attn_out
     h = apply_norm(x, p["ln2"], cfg.norm_type)
     if moe:
@@ -85,14 +86,28 @@ def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
 
 
 def _scan_stack(cfg, stacked, x, positions, cache, *, moe, kv_chunk,
-                want_kv, remat, moe_blocks=1, tshard_decode=False):
-    """Scan a homogeneous stacked layer group. cache: per-stack KVCache or
-    None. Returns (x, new_cache_or_kv, aux_sum)."""
+                want_kv, remat, moe_blocks=1, tshard_decode=False,
+                kv_pos_override=None):
+    """Scan a homogeneous stacked layer group. cache: per-stack KVCache,
+    engine SlotKVCache, or None. Returns (x, new_cache_or_kv, aux_sum)."""
     fn = functools.partial(_layer_apply, cfg, moe=moe, kv_chunk=kv_chunk,
                            want_kv=want_kv, moe_blocks=moe_blocks,
-                           tshard_decode=tshard_decode)
+                           tshard_decode=tshard_decode,
+                           kv_pos_override=kv_pos_override)
     if remat:
         fn = jax.checkpoint(fn, static_argnums=())
+
+    if cache is not None and not isinstance(cache, KVCache):
+        # engine slot cache: scan the dataclass itself — every data leaf
+        # has leading L, so each step sees a per-layer SlotKVCache slice
+        def step(carry, xs):
+            x, aux = carry
+            lp, cl = xs
+            x, new_cl, a = fn(lp, x, positions, cl)
+            return (x, aux + a), new_cl
+        (x, aux), new_cache = jax.lax.scan(step, (x, jnp.float32(0)),
+                                           (stacked, cache))
+        return x, new_cache, aux
 
     if cache is not None:
         def step(carry, xs):
@@ -128,15 +143,23 @@ def embed_inputs(params, cfg, batch):
 def forward(params, cfg, batch, cache: Optional[KVCache] = None,
             positions=None, *, kv_chunk=None, want_cache=False, remat=False,
             cache_len: Optional[int] = None, moe_blocks: int = 1,
-            tshard_decode: bool = False):
-    """Returns (logits, new_cache, aux). cache ⇒ decode step; want_cache ⇒
-    prefill (assembles a fresh cache from the computed K/V)."""
+            tshard_decode: bool = False, pad_mask=None):
+    """Returns (logits, new_cache, aux). cache ⇒ decode step (a KVCache, or
+    an engine SlotKVCache with per-request positions); want_cache ⇒ prefill
+    (assembles a fresh cache from the computed K/V). pad_mask (B, S) marks
+    True=padding tokens whose K/V must never be attended to (left- or
+    right-padded batched prefill)."""
     if cache is not None:
         x = embed_lookup(params["embed"], batch["tokens"])     # (B, 1)
     else:
         x, positions = (embed_inputs(params, cfg, batch)
                         if positions is None else
                         (embed_lookup(params["embed"], batch["tokens"]), positions))
+
+    kv_pos_override = None
+    if pad_mask is not None and cache is None:
+        kv_pos_override = jnp.where(pad_mask, jnp.int32(-1),
+                                    positions[None, :].astype(jnp.int32))
 
     n_moe = (cfg.n_layers - cfg.first_k_dense) if cfg.n_experts else 0
     n_dense = cfg.n_layers - n_moe
@@ -147,13 +170,15 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
     def split_cache(cache, lo, hi):
         if cache is None:
             return None
-        return KVCache(cache.k[lo:hi], cache.v[lo:hi], cache.slot_pos[lo:hi])
+        # every cache leaf carries leading L (KVCache and SlotKVCache alike)
+        return jax.tree_util.tree_map(lambda a: a[lo:hi], cache)
 
     if n_dense:
         x, c, a = _scan_stack(cfg, params["layers"], x, positions,
                               split_cache(cache, 0, n_dense), moe=False,
                               kv_chunk=kv_chunk, want_kv=want_kv, remat=remat,
-                              tshard_decode=tshard_decode)
+                              tshard_decode=tshard_decode,
+                              kv_pos_override=kv_pos_override)
         aux += a
         (caches if cache is not None else kvs).append(c)
     if n_moe:
@@ -161,7 +186,8 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               split_cache(cache, n_dense, cfg.n_layers),
                               moe=True, kv_chunk=kv_chunk, want_kv=want_kv,
                               remat=remat, moe_blocks=moe_blocks,
-                              tshard_decode=tshard_decode)
+                              tshard_decode=tshard_decode,
+                              kv_pos_override=kv_pos_override)
         aux += a
         (caches if cache is not None else kvs).append(c)
 
@@ -178,19 +204,21 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
 
     new_cache = None
     if cache is not None:
-        new_cache = KVCache(
-            k=jnp.concatenate([c.k for c in caches], 0),
-            v=jnp.concatenate([c.v for c in caches], 0),
-            slot_pos=jnp.concatenate([c.slot_pos for c in caches], 0))
+        new_cache = (caches[0] if len(caches) == 1 else
+                     jax.tree_util.tree_map(
+                         lambda *xs: jnp.concatenate(xs, 0), *caches))
     elif want_cache:
-        new_cache = assemble_cache(cfg, kvs, positions, max_len=cache_len)
+        new_cache = assemble_cache(cfg, kvs, positions, max_len=cache_len,
+                                   pad_mask=pad_mask)
     return logits, new_cache, aux
 
 
-def assemble_cache(cfg, kvs, positions, max_len: Optional[int] = None):
+def assemble_cache(cfg, kvs, positions, max_len: Optional[int] = None,
+                   pad_mask=None):
     """Build a decode cache from prefill K/V. Windowed attention keeps a
     ring of the last `window` positions; global keeps everything (padded to
-    max_len if given)."""
+    max_len if given). With pad_mask (B, S), slot_pos becomes per-request
+    (L, B, T) and padded entries are marked -1 (never attended)."""
     k = jnp.concatenate([kv[0] for kv in kvs], axis=0)   # (L, B, S, Hkv, D)
     v = jnp.concatenate([kv[1] for kv in kvs], axis=0)
     L, B, S = k.shape[0], k.shape[1], k.shape[2]
@@ -202,6 +230,10 @@ def assemble_cache(cfg, kvs, positions, max_len: Optional[int] = None):
         slot = pos % W
         inv = jnp.argsort(slot)
         k, v, pos = k[:, :, inv], v[:, :, inv], pos[inv]
+        if pad_mask is not None:
+            padb = pad_mask[:, -W:][:, inv]              # (B, W) ring order
+            sp = jnp.where(padb, -1, pos[None, :]).astype(jnp.int32)
+            return KVCache(k, v, jnp.broadcast_to(sp, (L, B, W)))
         slot_pos = jnp.broadcast_to(pos, (L, W)).astype(jnp.int32)
         return KVCache(k, v, slot_pos)
     T = max_len or S
@@ -211,6 +243,10 @@ def assemble_cache(cfg, kvs, positions, max_len: Optional[int] = None):
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     sp = jnp.concatenate([positions.astype(jnp.int32),
                           jnp.full((pad,), -1, jnp.int32)])
+    if pad_mask is not None:
+        padb = jnp.pad(pad_mask, ((0, 0), (0, pad)), constant_values=True)
+        sp = jnp.where(padb, -1, sp[None, :]).astype(jnp.int32)  # (B, T)
+        return KVCache(k, v, jnp.broadcast_to(sp, (L, B, T)))
     return KVCache(k, v, jnp.broadcast_to(sp, (L, T)))
 
 
@@ -247,9 +283,19 @@ def decode_step(params, cfg, cache: KVCache, tokens, pos, *, kv_chunk=None,
     return logits, cache
 
 
+def decode_step_slots(params, cfg, cache, tokens, pos, *, kv_chunk=None):
+    """One decode step over an engine slot cache. tokens: (N, 1) int32;
+    pos: (N,) int32 per-slot absolute positions (one per request — slots
+    at different depths decode together)."""
+    positions = jnp.reshape(pos, (-1, 1)).astype(jnp.int32)
+    logits, cache, _ = forward(params, cfg, {"tokens": tokens}, cache=cache,
+                               positions=positions, kv_chunk=kv_chunk)
+    return logits, cache
+
+
 def prefill(params, cfg, batch, max_len: Optional[int] = None, *,
-            kv_chunk=None, moe_blocks: int = 1):
+            kv_chunk=None, moe_blocks: int = 1, pad_mask=None):
     logits, cache, _ = forward(params, cfg, batch, kv_chunk=kv_chunk,
                                want_cache=True, cache_len=max_len,
-                               moe_blocks=moe_blocks)
+                               moe_blocks=moe_blocks, pad_mask=pad_mask)
     return logits, cache

@@ -1,21 +1,29 @@
-"""Batched serving loop for quantized models.
+"""Batched wave serving loop for quantized models.
 
-The deployment path of the paper: weights are SplitQuant-preprocessed and
-low-bit quantized once offline (`quantize_tree`), then served with the
-fused cluster-dequant matmul. The loop does continuous batching over a
-request queue: prefill new requests, decode the active batch one token per
-step, retire finished sequences.
+The original deployment path of the paper: weights are SplitQuant-
+preprocessed and low-bit quantized once offline (`quantize_tree`), then
+served with the fused cluster-dequant matmul. Requests are grouped into
+prefill waves of up to max_batch; each wave decodes together until every
+member finishes — a finished (or short) request's slot stays occupied
+until the wave's longest generation completes.
+
+This wave-synchronous loop is kept as the baseline the continuous-
+batching engine (`repro.engine`) is benchmarked against; new serving code
+should use the engine. `benchmarks/serve_bench.py` measures the gap.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import get_model
+
+#: families whose prefill accepts pad_mask (per-request KV validity)
+PAD_MASK_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
@@ -31,14 +39,18 @@ class ServeConfig:
 class Request:
     uid: int
     prompt: np.ndarray              # (S,) int32
+    max_new_tokens: Optional[int] = None   # None ⇒ ServeConfig budget
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class Server:
-    """Minimal continuous-batching server (single-wave variant: requests
-    are grouped into prefill waves of up to max_batch; each wave decodes
-    together — the structure a production scheduler slots into)."""
+    """Minimal wave-batching server (baseline for `repro.engine.Engine`).
+
+    Prompts in a wave are left-padded to a common length; the pad tokens
+    are excluded from attention via a pad mask threaded through
+    `model.prefill` (their K/V entries are marked position -1, the same
+    invalid marker empty ring slots use)."""
 
     def __init__(self, cfg, params, serve_cfg: ServeConfig,
                  rng: Optional[jax.Array] = None):
@@ -62,16 +74,31 @@ class Server:
             wave = requests[i:i + scfg.max_batch]
             S = max(len(r.prompt) for r in wave)
             toks = np.zeros((len(wave), S), np.int32)
+            pad = np.ones((len(wave), S), bool)
             for j, r in enumerate(wave):
                 toks[j, S - len(r.prompt):] = r.prompt      # left-pad
+                pad[j, S - len(r.prompt):] = False
             batch = {"tokens": jnp.asarray(toks)}
+            kw = {}
+            if self.cfg.family in PAD_MASK_FAMILIES:
+                kw["pad_mask"] = jnp.asarray(pad)
             logits, cache = self.model.prefill(
-                self.params, self.cfg, batch, max_len=scfg.max_len)
+                self.params, self.cfg, batch, max_len=scfg.max_len, **kw)
             tok = self._sample(logits)
+            limits = [scfg.max_new_tokens if r.max_new_tokens is None
+                      else r.max_new_tokens for r in wave]
             for j, r in enumerate(wave):
-                r.out.append(int(tok[j]))
+                t = int(tok[j])
+                # eos is never emitted — also on the prefill-sampled first
+                # token (same semantics as the engine)
+                if limits[j] <= 0 or t == scfg.eos_id:
+                    r.done = True
+                    continue
+                r.out.append(t)
+                if len(r.out) >= limits[j]:
+                    r.done = True
             pos = S
-            for _ in range(scfg.max_new_tokens - 1):
+            for _ in range(max(limits + [1]) - 1):
                 logits, cache = self._decode(
                     self.params, cache, tok[:, None].astype(jnp.int32),
                     jnp.int32(pos))
@@ -84,8 +111,11 @@ class Server:
                     t = int(tok[j])
                     if t == scfg.eos_id:
                         r.done = True
+                        continue
+                    r.out.append(t)
+                    if len(r.out) >= limits[j]:
+                        r.done = True
                     else:
-                        r.out.append(t)
                         alive = True
                 if not alive:
                     break

@@ -1,0 +1,188 @@
+"""Continuous-batching engine: scheduler lifecycle, slot-cache numerics
+(INT8 KV vs fp), and end-to-end greedy equivalence against both a naive
+per-request decode loop and the wave-synchronous baseline server."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import Engine, EngineConfig, EngineRequest, Scheduler
+from repro.engine.kvcache import dequantize_kv, init_slot_cache, quantize_kv
+from repro.models import get_model
+from repro.runtime.serve_loop import Request, ServeConfig, Server
+
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 48
+NEW_TOKENS = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 14)))
+               for _ in range(7)]
+    return cfg, model, params, prompts
+
+
+def naive_generate(model, cfg, params, prompt, n_tokens):
+    """Per-request greedy reference: B=1 prefill + decode loop."""
+    logits, cache = model.prefill(
+        params, cfg, {"tokens": jnp.asarray(prompt)[None]}, max_len=MAX_LEN)
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    pos = len(prompt)
+    for _ in range(n_tokens - 1):
+        logits, cache = model.decode_step(
+            params, cfg, cache, jnp.asarray([[tok]], jnp.int32),
+            jnp.int32(pos))
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+# ------------------------------------------------------------ scheduler ---
+def test_scheduler_fcfs_admit_retire():
+    s = Scheduler(n_slots=2, clock=lambda: 0.0)
+    reqs = [s.submit(EngineRequest(uid=i, prompt=[0], max_new_tokens=4))
+            for i in range(5)]
+    placed = s.admit()
+    assert [(slot, r.uid) for slot, r in placed] == [(0, 0), (1, 1)]
+    assert s.admit() == []                        # pool full
+    assert len(s.queue) == 3
+    s.retire(0)
+    assert reqs[0].done and s.slots[0] is None
+    placed = s.admit()
+    assert [(slot, r.uid) for slot, r in placed] == [(0, 2)]   # FCFS refill
+    for slot in list(s.active_slots()):
+        s.retire(slot)
+    while not s.idle:
+        for slot, _ in s.admit():
+            s.retire(slot)
+    assert sorted(r.uid for r in s.finished) == [0, 1, 2, 3, 4]
+    assert s.n_admitted == 5
+
+
+def test_engine_mixed_lengths_and_eos(setup):
+    """Admission/retire under mixed prompt lengths, per-request budgets and
+    a forced eos: every request terminates, slots are reused."""
+    cfg, model, params, prompts = setup
+    # pick an eos id the greedy model actually emits for one request so the
+    # early-stop path runs (probe the reference first)
+    ref0 = naive_generate(model, cfg, params, prompts[0], 4)
+    eos = ref0[2]                                  # stops request 0 early
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_len=MAX_LEN, max_new_tokens=8, eos_id=eos,
+        prefill_bucket=8))
+    budgets = [8, 3, 8, 5, 8, 2, 8]
+    for p, b in zip(prompts, budgets):
+        eng.submit(p, max_new_tokens=b)
+    fin = eng.drain()
+    assert len(fin) == len(prompts)
+    assert [r.uid for r in fin] == list(range(len(prompts)))
+    for r, b in zip(fin, budgets):
+        assert r.done and 0 < len(r.out) <= b
+        assert eos not in r.out                    # eos never emitted
+        assert r.ttft is not None and r.t_done is not None
+    # with 7 requests through 2 slots, the pool must have been recycled
+    assert eng.sched.n_admitted == 7
+    assert eng.metrics()["queue_depth_max"] >= 3
+
+
+# -------------------------------------------------------------- numerics ---
+def test_kv_quant_roundtrip_error_bounded():
+    """INT8 chunked-range quantization reconstructs K/V head-vectors to
+    ~range/255 absolute error per chunk."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(5, 3, 4, 64)).astype(np.float32))
+    # inject per-chunk outliers: separate ranges must localize the damage
+    x = x.at[..., 0].mul(50.0)
+    q, scale, zero = quantize_kv(x, qchunks=4)
+    xr = dequantize_kv(q, scale, zero)
+    xc = np.asarray(x).reshape(5, 3, 4, 4, 16)
+    step = (xc.max(-1) - xc.min(-1)) / 255.0       # per-chunk quant step
+    err = np.abs(np.asarray(xr - x)).reshape(5, 3, 4, 4, 16).max(-1)
+    # value rounding (step/2) + zero-point rounding (step/2) ⇒ ≤ 1 step
+    assert np.all(err <= step + 1e-6)
+    # the outlier chunk must not inflate the other chunks' error
+    assert err[..., 1:].max() < 0.04
+
+
+def test_int8_kv_decode_logits_close(setup):
+    """Decode logits read from the INT8 KV cache stay within a tight bound
+    of the fp cache path — identical prefill state written to both caches,
+    one `decode_step_slots` over each."""
+    from repro.engine.kvcache import write_prefill
+    from repro.models import transformer
+
+    cfg, model, params, prompts = setup
+
+    def decode_logits(kv_mode):
+        cache = init_slot_cache(cfg, 2, MAX_LEN, mode=kv_mode)
+        toks, pos = [], []
+        for slot, p in enumerate(prompts[:2]):
+            logits, pc = model.prefill(
+                params, cfg, {"tokens": jnp.asarray(p)[None]})
+            cache = write_prefill(cache, slot, pc, len(p))
+            toks.append(int(jnp.argmax(logits[0, -1])))
+            pos.append(len(p))
+        logits, _ = transformer.decode_step_slots(
+            params, cfg, cache, jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32))
+        return np.asarray(logits[:, -1])
+
+    lf = decode_logits("fp")
+    lq = decode_logits("int8")
+    # stated tolerance: max |Δlogit| ≤ 0.05 for INT8 KV at reduced scale
+    assert np.max(np.abs(lf - lq)) <= 0.05, np.max(np.abs(lf - lq))
+
+
+# ------------------------------------------------------------ end-to-end ---
+def test_engine_matches_naive_reference(setup):
+    cfg, model, params, prompts = setup
+    ref = [naive_generate(model, cfg, params, p, NEW_TOKENS)
+           for p in prompts]
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=3, max_len=MAX_LEN, max_new_tokens=NEW_TOKENS,
+        prefill_bucket=8))
+    for p in prompts:
+        eng.submit(p)
+    fin = eng.drain()
+    assert [r.out for r in fin] == ref
+
+
+def test_engine_matches_wave_server_greedy(setup):
+    """Token-for-token greedy equivalence with the wave baseline on MIXED
+    prompt lengths — exercises both the engine's per-request prefill and
+    the wave server's left-pad masking."""
+    cfg, model, params, prompts = setup
+    srv = Server(cfg, params, ServeConfig(
+        max_batch=3, max_new_tokens=NEW_TOKENS, max_len=MAX_LEN))
+    wave = srv.serve([Request(i, p.copy()) for i, p in enumerate(prompts)])
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=3, max_len=MAX_LEN, max_new_tokens=NEW_TOKENS,
+        prefill_bucket=8))
+    for p in prompts:
+        eng.submit(p)
+    fin = eng.drain()
+    assert [r.out for r in fin] == [r.out for r in wave]
+
+
+def test_int8_engine_first_tokens_match(setup):
+    """INT8 KV drifts over long generations, but the first greedy tokens
+    must match the fp path (prefill is exact; decode reads dequantized)."""
+    cfg, model, params, prompts = setup
+
+    def run(kv_mode):
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=3, max_len=MAX_LEN, max_new_tokens=2,
+            prefill_bucket=8, kv_mode=kv_mode))
+        for p in prompts:
+            eng.submit(p)
+        return [r.out[0] for r in eng.drain()]
+
+    assert run("int8") == run("fp")
