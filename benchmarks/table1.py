@@ -1,7 +1,7 @@
 """Paper Table 1 reproduction: BERT-Tiny × {emotion-like 6-way, spam-like
 binary} × {FP32, INT2/4/8} × {baseline PTQ, SplitQuant}.
 
-Offline constraint (DESIGN.md §7): the HF checkpoints + DAIR.AI/UCI datasets
+Offline constraint: the HF checkpoints + DAIR.AI/UCI datasets
 are not downloadable, so the repro is *structural*: same model family, two
 synthetic classification tasks calibrated to the paper's FP32 accuracy
 regime (~0.90 6-way, ~0.98 binary), same quantization grid and comparison.

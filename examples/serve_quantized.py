@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"])
+    ap.add_argument("--recipe", default=None,
+                    help="serve from a calibration recipe dir (see "
+                         "`python -m repro.launch.serve --save-recipe`): "
+                         "pre-quantized weights, static INT8 KV scales")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -41,19 +45,37 @@ def main():
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10))
                for _ in range(args.requests)]
 
-    def generate(p, label):
-        eng = Engine(cfg, p, ecfg)
+    def generate(p, label, kv_scales=None):
+        eng = Engine(cfg, p, ecfg, kv_scales=kv_scales)
         for pr in prompts:
             eng.submit(pr.copy())
         out = eng.drain()
         m = eng.metrics()
         print(f"-- {label}  ({m['tokens_per_s']:.1f} tok/s, "
-              f"kv={m['kv_mode']})")
+              f"kv={m['kv_mode']}{'/static' if m['kv_static_scales'] else ''})")
         for r in out[:3]:
             print(f"   req {r.uid}: {r.out}")
         return [tuple(r.out) for r in out]
 
     ref = generate(params, "fp32")
+
+    if args.recipe:
+        # calibrated path: weights restore pre-quantized (no k-means) and
+        # an INT8 KV cache quantizes with the recipe's static scales
+        import dataclasses
+        from repro.launch.serve import load_recipe_params
+        qp, rec, kv_scales = load_recipe_params(args.recipe, params,
+                                                arch=args.arch)
+        if args.kv_mode != "int8":
+            kv_scales = None
+        ecfg = dataclasses.replace(ecfg, kv_qchunks=rec.kv_qchunks)
+        outs = generate(qp, f"recipe {rec.name}", kv_scales=kv_scales)
+        match = np.mean([
+            np.mean([a == b for a, b in zip(o, r)])
+            for o, r in zip(outs, ref)])
+        print(f"   token agreement with fp32: {match:.1%}")
+        return
+
     for method in ("baseline", "splitquant"):
         qp, rep = quantize_tree(key, params, QuantPolicy(
             cfg=QuantConfig(bits=args.bits), method=method))

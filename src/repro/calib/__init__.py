@@ -1,0 +1,32 @@
+"""Offline calibration subsystem: measure → decide → serialize → serve.
+
+Dataflow (DESIGN.md §7):
+
+    stats.collect_*           activation / KV range statistics
+        │
+    sensitivity.layer_sensitivity
+        │                     per-group logit damage × deployed bytes
+    allocate.greedy_allocate
+        │                     mixed-precision (bits, k, method) per path
+    recipe.QuantRecipe        JSON + npz on disk
+        │
+    quantize_tree(overrides=…) + Engine(kv_scales=…) + ckpt
+
+Everything here runs offline, once; serving (`launch/serve.py --recipe`)
+only reads the recipe (and optionally a pre-quantized checkpoint), so no
+k-means, no calibration batches, and no runtime min/max on the decode hot
+path.
+"""
+from .allocate import best_uniform_within, greedy_allocate, uniform_bytes
+from .recipe import QuantRecipe
+from .sensitivity import (layer_sensitivity, quantizable_groups,
+                          sensitivity_summary)
+from .stats import (ActStats, act_static_scales, collect_act_stats,
+                    collect_kv_stats, kv_static_scales, static_qparams)
+
+__all__ = [
+    "ActStats", "QuantRecipe", "act_static_scales", "best_uniform_within",
+    "collect_act_stats", "collect_kv_stats", "greedy_allocate",
+    "kv_static_scales", "layer_sensitivity", "quantizable_groups",
+    "sensitivity_summary", "static_qparams", "uniform_bytes",
+]

@@ -1,0 +1,115 @@
+"""QuantRecipe: the serializable product of offline calibration.
+
+A recipe is everything the serving stack needs to deploy a quantized model
+*without* redoing any calibration work at startup:
+
+  * ``policies``   — per-path ``{bits, k, method[, percentile]}`` overrides
+                     for :func:`repro.core.apply.quantize_tree` (the output
+                     of :mod:`repro.calib.allocate`);
+  * ``kv_scales``  — static per-layer INT8 KV-cache quantization params
+                     (``k_scale/k_zero/v_scale/v_zero``, each (L, Hkv, C))
+                     that let the engine skip the per-step min/max reduce;
+  * ``act_scales`` — static per-site activation scale/zero arrays for the
+                     fused act-quant kernel path;
+  * ``ckpt_dir``   — optional pointer to a checkpoint of the already-
+                     quantized weight tree (see ``checkpoint/ckpt.py``
+                     quant-meta support), so serving never re-runs k-means.
+
+On disk a recipe is a directory: ``recipe.json`` holds everything scalar
+and the policy map; ``scales.npz`` holds the arrays. Loading is a plain
+read — no model, no data, no clustering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+RECIPE_JSON = "recipe.json"
+SCALES_NPZ = "scales.npz"
+
+KV_KEYS = ("k_scale", "k_zero", "v_scale", "v_zero")
+
+
+@dataclasses.dataclass
+class QuantRecipe:
+    """Offline calibration output (see module docstring)."""
+
+    name: str = "recipe"
+    arch: str = ""
+    #: per-path quantize_tree overrides: {path: {bits|k|method|percentile}}
+    policies: dict = dataclasses.field(default_factory=dict)
+    #: static KV quant params {k_scale,k_zero,v_scale,v_zero: (L, Hkv, C)}
+    kv_scales: Optional[dict] = None
+    kv_qchunks: int = 4
+    #: static activation params {site: {"scale": arr, "zero": arr}}
+    act_scales: Optional[dict] = None
+    #: checkpoint dir holding the pre-quantized weight tree (no k-means
+    #: at serve startup); relative paths resolve against the recipe dir
+    ckpt_dir: Optional[str] = None
+    #: free-form provenance (budget, calibration set, sensitivity summary)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------- save ---
+    def save(self, recipe_dir: str) -> str:
+        os.makedirs(recipe_dir, exist_ok=True)
+        arrays = {}
+        if self.kv_scales is not None:
+            missing = [kk for kk in KV_KEYS if kk not in self.kv_scales]
+            if missing:
+                raise ValueError(f"kv_scales missing {missing}")
+            for kk in KV_KEYS:
+                arrays[f"kv/{kk}"] = np.asarray(self.kv_scales[kk],
+                                                np.float32)
+        for site, sz in (self.act_scales or {}).items():
+            arrays[f"act/{site}/scale"] = np.asarray(sz["scale"], np.float32)
+            arrays[f"act/{site}/zero"] = np.asarray(sz["zero"], np.float32)
+        doc = {
+            "name": self.name,
+            "arch": self.arch,
+            "policies": self.policies,
+            "kv_qchunks": self.kv_qchunks,
+            "has_kv_scales": self.kv_scales is not None,
+            "act_sites": sorted((self.act_scales or {}).keys()),
+            "ckpt_dir": self.ckpt_dir,
+            "meta": self.meta,
+        }
+        tmp = os.path.join(recipe_dir, RECIPE_JSON + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True, default=str)
+        if arrays:
+            np.savez(os.path.join(recipe_dir, SCALES_NPZ), **arrays)
+        os.replace(tmp, os.path.join(recipe_dir, RECIPE_JSON))
+        return recipe_dir
+
+    # ------------------------------------------------------------- load ---
+    @classmethod
+    def load(cls, recipe_dir: str) -> "QuantRecipe":
+        with open(os.path.join(recipe_dir, RECIPE_JSON)) as f:
+            doc = json.load(f)
+        npz_path = os.path.join(recipe_dir, SCALES_NPZ)
+        arrays = dict(np.load(npz_path)) if os.path.exists(npz_path) else {}
+        kv_scales = None
+        if doc.get("has_kv_scales"):
+            kv_scales = {kk: arrays[f"kv/{kk}"] for kk in KV_KEYS}
+        act_scales = {site: {"scale": arrays[f"act/{site}/scale"],
+                             "zero": arrays[f"act/{site}/zero"]}
+                      for site in doc.get("act_sites", [])}
+        return cls(name=doc["name"], arch=doc["arch"],
+                   policies=doc.get("policies", {}),
+                   kv_scales=kv_scales,
+                   kv_qchunks=int(doc.get("kv_qchunks", 4)),
+                   act_scales=act_scales or None,
+                   ckpt_dir=doc.get("ckpt_dir"),
+                   meta=doc.get("meta", {}))
+
+    def resolve_ckpt_dir(self, recipe_dir: str) -> Optional[str]:
+        """ckpt_dir as an absolute path (relative = inside the recipe)."""
+        if self.ckpt_dir is None:
+            return None
+        if os.path.isabs(self.ckpt_dir):
+            return self.ckpt_dir
+        return os.path.join(recipe_dir, self.ckpt_dir)

@@ -1,0 +1,204 @@
+"""Calibration pass: run batches through a registry model and collect the
+range statistics the rest of the calibration stack consumes.
+
+Two collectors, matching the two places SplitQuant quantizes activations:
+
+* :func:`collect_act_stats` — per-layer, per-site activation ranges of the
+  encoder family's §4.2 tap points (min/max, symmetric percentile clip
+  points, per-chunk min/max) via the instrumented forward pass
+  (``bert_tiny.forward(collect_stats=...)`` emits stats through the layer
+  scan, so a 2-layer model costs one forward per batch, not 2·sites).
+* :func:`collect_kv_stats` — per-layer, per-head, per-chunk K/V ranges of
+  a transformer-family model, measured on the actual prefill path (the
+  same tensors the engine's INT8 slot cache stores at rest).
+
+Batch-to-batch merging is exact for min/max (running min/max) and the
+standard observer approximation for percentiles (running mean of
+per-batch percentiles — a single batch cannot see the global quantiles).
+
+From the merged stats, :func:`kv_static_scales` / :func:`act_static_scales`
+derive the (S, Z) constants a :class:`~repro.calib.recipe.QuantRecipe`
+ships to serving, where they replace the runtime min/max reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+
+
+@dataclasses.dataclass
+class ActStats:
+    """Merged activation statistics. ``sites[name]`` maps each stat
+    (min/max/p_lo/p_hi scalars-per-layer (L,), chunk_min/chunk_max
+    (L, C)) to a numpy array."""
+
+    sites: dict
+    n_chunks: int
+    percentile: float
+    n_batches: int = 0
+
+
+def _merge(acc: Optional[dict], new: dict, n_seen: int) -> dict:
+    """Merge one batch's stats tree into the accumulator (numpy)."""
+    new = {k: {s: np.asarray(v) for s, v in d.items()}
+           for k, d in new.items()}
+    if acc is None:
+        return new
+    out = {}
+    for site, d in new.items():
+        a = acc[site]
+        out[site] = {
+            "min": np.minimum(a["min"], d["min"]),
+            "max": np.maximum(a["max"], d["max"]),
+            "chunk_min": np.minimum(a["chunk_min"], d["chunk_min"]),
+            "chunk_max": np.maximum(a["chunk_max"], d["chunk_max"]),
+            # running mean over batches for the quantile estimates
+            "p_lo": a["p_lo"] + (d["p_lo"] - a["p_lo"]) / (n_seen + 1),
+            "p_hi": a["p_hi"] + (d["p_hi"] - a["p_hi"]) / (n_seen + 1),
+        }
+    return out
+
+
+def collect_act_stats(cfg, params, batches: Iterable[dict], *,
+                      n_chunks: int = 3, percentile: float = 0.99
+                      ) -> ActStats:
+    """Per-layer activation ranges at the §4.2 tap sites of an encoder
+    (BERT-Tiny) model over an iterable of calibration batches."""
+    model = get_model(cfg)
+    opts = {"n_chunks": n_chunks, "percentile": percentile}
+
+    @jax.jit
+    def stats_pass(p, b):
+        _, stats = model.forward(p, cfg, b, collect_stats=opts)
+        return stats
+
+    acc, n = None, 0
+    for b in batches:
+        jb = {k: jnp.asarray(v) for k, v in b.items()
+              if k in ("tokens", "mask")}
+        acc = _merge(acc, jax.device_get(stats_pass(params, jb)), n)
+        n += 1
+    if acc is None:
+        raise ValueError("no calibration batches")
+    return ActStats(sites=acc, n_chunks=n_chunks, percentile=percentile,
+                    n_batches=n)
+
+
+def collect_kv_stats(cfg, params, batches: Iterable[np.ndarray], *,
+                     qchunks: int = 4) -> dict:
+    """Per-(layer, head, chunk) K/V ranges of a transformer-family model.
+
+    ``batches``: iterable of (B, S) int32 token arrays (equal S per batch;
+    serving calibration needs no labels). Runs the real ``prefill`` and
+    reduces the assembled cache K/V (L, B, S, Hkv, D) over batch, position
+    and within-chunk channels → min/max (L, Hkv, C), merged across
+    batches. Returns {"k_min","k_max","v_min","v_max"}.
+    """
+    model = get_model(cfg)
+    D = cfg.head_dim
+    if D % qchunks:
+        raise ValueError(f"head_dim {D} not divisible by qchunks {qchunks}")
+
+    @jax.jit
+    def ranges(p, toks):
+        _, cache = model.prefill(p, cfg, {"tokens": toks})
+        out = {}
+        for name, buf in (("k", cache.k), ("v", cache.v)):
+            L, B, S, H, _ = buf.shape
+            xc = buf.astype(jnp.float32).reshape(L, B, S, H, qchunks,
+                                                 D // qchunks)
+            out[f"{name}_min"] = jnp.min(xc, axis=(1, 2, 5))   # (L, H, C)
+            out[f"{name}_max"] = jnp.max(xc, axis=(1, 2, 5))
+        return out
+
+    acc = None
+    for toks in batches:
+        r = jax.device_get(ranges(params, jnp.asarray(toks, jnp.int32)))
+        if acc is None:
+            acc = r
+        else:
+            for kk in ("k_min", "v_min"):
+                acc[kk] = np.minimum(acc[kk], r[kk])
+            for kk in ("k_max", "v_max"):
+                acc[kk] = np.maximum(acc[kk], r[kk])
+    if acc is None:
+        raise ValueError("no calibration batches")
+    return acc
+
+
+def static_qparams(beta: np.ndarray, alpha: np.ndarray, *, bits: int = 8
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Offline (β, α) → (S, Z) with an EXACT fractional zero-point.
+
+    The runtime `qparams` follows paper eq. 3 and ROUNDS the zero-point
+    to an integer; static quantizers (`quantize_kv_static`,
+    `act_split_quantize_static`) fold Z into the rounding instead —
+    ``q = rint(S·x + Z)`` — so the zero-rounding error term does not
+    apply to calibrated scales. Single derivation shared by the KV and
+    activation recipe payloads.
+    """
+    beta = np.asarray(beta, np.float32)
+    alpha = np.asarray(alpha, np.float32)
+    qmin = -(2 ** (bits - 1))
+    levels = 2 ** bits - 1
+    span = alpha - beta
+    amax = np.maximum(np.abs(beta), np.abs(alpha))
+    # degenerate (constant) chunks: S = 1/|v| maps v to code ±1 exactly
+    degenerate = np.where(amax > 0, 1.0 / np.where(amax > 0, amax, 1.0), 1.0)
+    scale = np.where(span > 0, levels / np.where(span > 0, span, 1.0),
+                     degenerate).astype(np.float32)
+    zero = np.where(span > 0, qmin - scale * beta, 0.0).astype(np.float32)
+    return scale, zero
+
+
+def kv_static_scales(kv_stats: dict, *, bits: int = 8,
+                     margin: float = 1.0) -> dict:
+    """(β, α) per (L, Hkv, C) → static (S, Z) for the engine slot cache.
+
+    ``margin`` > 1 widens the calibrated range symmetrically around its
+    midpoint — headroom against decode-time values the calibration set
+    never produced (clipping is the failure mode of static scales;
+    min/max beats percentile clipping here for the same reason it does in
+    the paper's weight study).
+    """
+    out = {}
+    for name in ("k", "v"):
+        beta = np.asarray(kv_stats[f"{name}_min"], np.float32)
+        alpha = np.asarray(kv_stats[f"{name}_max"], np.float32)
+        if margin != 1.0:
+            mid = (alpha + beta) / 2
+            half = (alpha - beta) / 2 * margin
+            beta, alpha = mid - half, mid + half
+        scale, zero = static_qparams(beta, alpha, bits=bits)
+        out[f"{name}_scale"] = scale
+        out[f"{name}_zero"] = zero
+    return out
+
+
+def act_static_scales(stats: ActStats, *, bits: int = 8,
+                      use_percentile: bool = False) -> dict:
+    """Per-site static activation (S, Z) from merged stats, per layer and
+    chunk: {site: {"scale": (L, C), "zero": (L, C)}} — the recipe payload
+    the fused act-quant kernel (`act_split_quantize_static`) consumes
+    instead of a runtime range pass. Zero-points are exact/fractional,
+    via the same `static_qparams` the KV payload uses.
+
+    ``use_percentile`` clips to the calibrated percentile range instead of
+    absolute min/max (the whole-tensor percentile applied per chunk).
+    """
+    out = {}
+    for site, d in stats.sites.items():
+        beta = np.asarray(d["chunk_min"], np.float32)
+        alpha = np.asarray(d["chunk_max"], np.float32)
+        if use_percentile:
+            beta = np.maximum(beta, d["p_lo"][..., None])
+            alpha = np.minimum(alpha, d["p_hi"][..., None])
+        scale, zero = static_qparams(beta, alpha, bits=bits)
+        out[site] = {"scale": scale, "zero": zero}
+    return out

@@ -6,6 +6,13 @@ dtypes). Writes go to a temp dir and are atomically renamed after fsync —
 a killed writer can never corrupt the latest checkpoint (fault-tolerance
 requirement). `retain` old steps are kept for rollback. Mesh-independent:
 restore re-shards to whatever mesh the restoring process uses.
+
+Quantized trees: `SplitQuantTensor` leaves flatten into their q/cid/scale/
+zero arrays (saved like any other), and the manifest records each leaf's
+static meta (bits / k / orig_shape / orig_dtype) under ``quant_meta``.
+`restore` rebuilds the SplitQuantTensors from the manifest — including
+into a plain fp32 `like` tree, which is how a serving process loads an
+offline-quantized checkpoint without re-running k-means.
 """
 from __future__ import annotations
 
@@ -19,10 +26,57 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.splitquant import SplitQuantTensor
+
+SQT_FIELDS = ("q", "cid", "scale", "zero")
+
+
+def _is_sqt(x) -> bool:
+    return isinstance(x, SplitQuantTensor)
+
 
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return {jax.tree_util.keystr(p): v for p, v in flat}, treedef
+
+
+def _quant_meta(tree) -> dict:
+    """{path: {bits, k, orig_shape, orig_dtype}} for SplitQuantTensor
+    subtrees — the meta that lives in the treedef, not in any array."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_sqt)
+    meta = {}
+    for p, v in flat:
+        if _is_sqt(v):
+            meta[jax.tree_util.keystr(p)] = {
+                "bits": int(v.bits), "k": int(v.k),
+                "orig_shape": list(v.orig_shape),
+                "orig_dtype": str(jnp.dtype(v.orig_dtype)),
+            }
+    return meta
+
+
+def _build_sqt(data, key: str, meta: Optional[dict],
+               fallback: Optional[SplitQuantTensor]) -> SplitQuantTensor:
+    """Reassemble one SplitQuantTensor from saved arrays + manifest meta
+    (meta falls back to the `like` leaf for pre-quant_meta checkpoints)."""
+    arrs = {f: data[f"{key}.{f}"] for f in SQT_FIELDS}
+    if meta is not None:
+        bits, k = int(meta["bits"]), int(meta["k"])
+        orig_shape = tuple(meta["orig_shape"])
+        orig_dtype = jnp.dtype(meta["orig_dtype"])
+    elif fallback is not None:
+        bits, k = fallback.bits, fallback.k
+        orig_shape, orig_dtype = fallback.orig_shape, fallback.orig_dtype
+    else:
+        raise ValueError(
+            f"checkpoint has quantized arrays for {key!r} but no "
+            f"quant_meta and no quantized `like` leaf to borrow meta from")
+    return SplitQuantTensor(
+        q=jnp.asarray(arrs["q"], jnp.int8),
+        cid=jnp.asarray(arrs["cid"], jnp.uint8),
+        scale=jnp.asarray(arrs["scale"], jnp.float32),
+        zero=jnp.asarray(arrs["zero"], jnp.float32),
+        bits=bits, k=k, orig_shape=orig_shape, orig_dtype=orig_dtype)
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, retain: int = 3,
@@ -44,6 +98,8 @@ def save(ckpt_dir: str, step: int, tree: Any, *, retain: int = 3,
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
 
+    quant_meta = _quant_meta(tree)
+
     def _write():
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "arrays.npz"), **host_arrays)
@@ -53,6 +109,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, retain: int = 3,
             "keys": list(host_arrays.keys()),
             "shapes": {k: list(v.shape) for k, v in host_arrays.items()},
             "dtypes": orig_dtypes,
+            "quant_meta": quant_meta,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -91,20 +148,38 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             shardings: Any = None) -> tuple[Any, int]:
     """Restore into the structure of `like` (values replaced). If
     `shardings` (matching pytree of NamedSharding) is given, arrays are
-    placed sharded — mesh-independent restore."""
+    placed sharded — mesh-independent restore.
+
+    Quantized checkpoints: positions recorded in the manifest's
+    ``quant_meta`` come back as `SplitQuantTensor`s with their saved
+    bits/k/orig_shape/orig_dtype — whether the matching `like` leaf is a
+    SplitQuantTensor (meta is overridden from the manifest) or a plain
+    dense array (the quantized leaf replaces it, so serving can restore
+    an offline-quantized tree into freshly-initialized fp32 params).
+    """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     data = np.load(os.path.join(path, "arrays.npz"))
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    quant_meta = manifest.get("quant_meta", {})
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like,
+                                                         is_leaf=_is_sqt)
+    has_quant = quant_meta or any(_is_sqt(leaf) for _, leaf in flat)
+    if shardings is not None and has_quant:
+        raise NotImplementedError(
+            "sharded restore of quantized trees is not supported")
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat))
     out = []
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
     for (p, leaf), sh in zip(flat, shard_flat):
         key = jax.tree_util.keystr(p)
+        if key in quant_meta or _is_sqt(leaf):
+            out.append(_build_sqt(data, key, quant_meta.get(key),
+                                  leaf if _is_sqt(leaf) else None))
+            continue
         arr = data[key]
         dt = manifest.get("dtypes", {}).get(key)
         if dt is not None:

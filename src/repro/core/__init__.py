@@ -6,14 +6,17 @@ from .splitquant import (
     splitquant_tensor,
     baseline_quant_tensor,
     split_activation_fake_quant,
+    activation_chunk_bounds,
     effective_scales,
 )
-from .apply import QuantPolicy, quantize_tree, dequantize_tree, DEFAULT_EXCLUDE
+from .apply import (QuantPolicy, quantize_tree, dequantize_tree,
+                    resolve_policy, DEFAULT_EXCLUDE, DEFAULT_PERCENTILE)
 
 __all__ = [
     "QuantConfig", "fake_quant", "qparams", "quantize", "dequantize",
     "value_range", "kmeans_1d", "KMeansResult", "SplitQuantTensor",
     "splitquant_tensor", "baseline_quant_tensor", "split_activation_fake_quant",
-    "effective_scales", "QuantPolicy", "quantize_tree", "dequantize_tree",
-    "DEFAULT_EXCLUDE",
+    "activation_chunk_bounds", "effective_scales", "QuantPolicy",
+    "quantize_tree", "dequantize_tree", "resolve_policy", "DEFAULT_EXCLUDE",
+    "DEFAULT_PERCENTILE",
 ]

@@ -100,8 +100,49 @@ def _quantizable(path_s: str, leaf, policy: QuantPolicy) -> bool:
     return True
 
 
+#: fallback clip when method="percentile" is asked for without an explicit
+#: percentile (paper §1: "often 99% is used in practice")
+DEFAULT_PERCENTILE = 0.99
+
+#: per-path override keys a recipe may carry (see repro.calib.recipe)
+OVERRIDE_KEYS = ("bits", "k", "method", "percentile")
+
+
+def resolve_policy(policy: QuantPolicy, override: Optional[dict] = None
+                   ) -> QuantPolicy:
+    """Effective policy for one leaf: apply a per-path override (bits / k /
+    method / percentile) and normalize method-dependent percentile handling
+    in ONE place:
+
+    * ``baseline``    — never clips (percentile forced to None);
+    * ``percentile``  — always clips (an unset/None percentile falls back
+                        to :data:`DEFAULT_PERCENTILE`);
+    * ``splitquant``  — uses cfg.percentile as given (normally None).
+    """
+    if override:
+        unknown = set(override) - set(OVERRIDE_KEYS)
+        if unknown:
+            raise ValueError(f"unknown override keys {sorted(unknown)}")
+        cfg_kw = {kk: override[kk] for kk in ("bits", "percentile")
+                  if kk in override}
+        pol_kw = {kk: override[kk] for kk in ("method", "k")
+                  if kk in override}
+        policy = policy.replace(
+            cfg=dataclasses.replace(policy.cfg, **cfg_kw), **pol_kw)
+    if policy.method == "baseline":
+        policy = policy.replace(
+            cfg=dataclasses.replace(policy.cfg, percentile=None))
+    elif policy.method == "percentile":
+        pct = (policy.cfg.percentile if policy.cfg.percentile is not None
+               else DEFAULT_PERCENTILE)
+        policy = policy.replace(
+            cfg=dataclasses.replace(policy.cfg, percentile=pct))
+    return policy
+
+
 def quantize_tree(key: jax.Array, params, policy: QuantPolicy,
-                  is_quantizable: Optional[Callable] = None):
+                  is_quantizable: Optional[Callable] = None,
+                  overrides: Optional[dict] = None):
     """Return a copy of ``params`` with quantizable leaves replaced by
     SplitQuantTensors (method-dependent), plus a report dict.
 
@@ -109,10 +150,21 @@ def quantize_tree(key: jax.Array, params, policy: QuantPolicy,
     * ``baseline``    — one scale set from full min/max range.
     * ``percentile``  — one scale set from the clipped range (de-facto
                         outlier treatment the paper argues against).
+    * ``none``        — leave the leaf in floating point (only meaningful
+                        as a per-path override).
+
+    ``overrides``: optional ``{path: {bits|k|method|percentile: ...}}`` map
+    (exact lowercase "a/b/c" paths as reported in ``report["quantized"]``)
+    applied on top of ``policy`` — the mechanism a calibration
+    :class:`~repro.calib.recipe.QuantRecipe` uses for mixed-precision
+    deployment. Unmatched override paths raise (a silently ignored
+    override would serve the wrong bit-widths).
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     report = {"quantized": [], "skipped": [], "deployed_bytes": 0,
-              "orig_bytes": 0}
+              "orig_bytes": 0, "per_path": {}}
+    overrides = dict(overrides or {})
+    unused = set(overrides)
     out_leaves = []
     keys = jax.random.split(key, max(len(flat), 1))
     for (path, leaf), k_i in zip(flat, keys):
@@ -122,24 +174,31 @@ def quantize_tree(key: jax.Array, params, policy: QuantPolicy,
             out_leaves.append(leaf)
             report["skipped"].append(path_s)
             continue
+        eff = resolve_policy(policy, overrides.get(path_s))
+        unused.discard(path_s)
+        if eff.method == "none":
+            out_leaves.append(leaf)
+            report["skipped"].append(path_s)
+            continue
         sd = infer_stack_dims(path_s, leaf)
-        if policy.method == "splitquant":
-            sq = splitquant_tensor(k_i, leaf, policy.cfg, k=policy.k,
-                                   sample_size=policy.sample_size,
+        if eff.method == "splitquant":
+            sq = splitquant_tensor(k_i, leaf, eff.cfg, k=eff.k,
+                                   sample_size=eff.sample_size,
                                    stack_dims=sd)
-        elif policy.method == "baseline":
-            cfg = dataclasses.replace(policy.cfg, percentile=None)
-            sq = baseline_quant_tensor(leaf, cfg, stack_dims=sd)
-        elif policy.method == "percentile":
-            cfg = policy.cfg if policy.cfg.percentile else dataclasses.replace(
-                policy.cfg, percentile=0.99)
-            sq = baseline_quant_tensor(leaf, cfg, stack_dims=sd)
+        elif eff.method in ("baseline", "percentile"):
+            sq = baseline_quant_tensor(leaf, eff.cfg, stack_dims=sd)
         else:
-            raise ValueError(f"unknown method {policy.method!r}")
+            raise ValueError(f"unknown method {eff.method!r}")
         out_leaves.append(sq)
         report["quantized"].append(path_s)
+        report["per_path"][path_s] = {"bits": eff.cfg.bits, "k": sq.k,
+                                      "method": eff.method,
+                                      "bytes": sq.nbytes_deployed()}
         report["deployed_bytes"] += sq.nbytes_deployed()
         report["orig_bytes"] += leaf.size * 4
+    if unused:
+        raise ValueError(f"overrides matched no quantizable leaf: "
+                         f"{sorted(unused)}")
     return jax.tree_util.tree_unflatten(treedef, out_leaves), report
 
 

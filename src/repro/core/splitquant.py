@@ -202,20 +202,31 @@ def baseline_quant_tensor(w: jnp.ndarray, cfg: QuantConfig,
                              stack_dims=stack_dims)
 
 
+def activation_chunk_bounds(n: int, n_chunks: int) -> list[int]:
+    """§4.2 chunk boundaries along an axis of width ``n``: the
+    ``jnp.array_split`` partition (first ``n % n_chunks`` chunks one element
+    wider), so indivisible widths still split into ``n_chunks`` parts."""
+    n_chunks = max(1, min(n_chunks, n))
+    base, rem = divmod(n, n_chunks)
+    bounds = [0]
+    for c in range(n_chunks):
+        bounds.append(bounds[-1] + base + (1 if c < rem else 0))
+    return bounds
+
+
 def split_activation_fake_quant(x: jnp.ndarray, cfg: QuantConfig,
                                 n_chunks: int = 3, axis: int = -1) -> jnp.ndarray:
-    """Paper §4.2: split an activation vector into ``n_chunks`` equal chunks,
-    quantize each with its own dynamic range, concatenate. Falls back to a
-    single chunk when the axis is not divisible.
+    """Paper §4.2: split an activation vector into ``n_chunks`` chunks,
+    quantize each with its own dynamic range, concatenate. Indivisible
+    widths use uneven chunks (``jnp.array_split`` semantics) so the split
+    never silently degrades to a single range.
 
     This is simulated (fake) quantization — ranges are computed at runtime,
     exactly as an int inference engine would calibrate dynamic activations.
     """
     axis = axis % x.ndim
-    n = x.shape[axis]
-    if n_chunks <= 1 or n % n_chunks != 0:
-        n_chunks = 1
-    parts = jnp.split(x, n_chunks, axis=axis)
+    parts = jnp.array_split(x, max(1, min(n_chunks, x.shape[axis])),
+                            axis=axis)
     outs = []
     for p in parts:
         beta = jnp.min(p)

@@ -7,12 +7,13 @@ models ← engine.kvcache edge (attention's slot-cache branch) acyclic.
 from __future__ import annotations
 
 from .kvcache import (SlotKVCache, clear_slot, dequantize_kv,
-                      init_slot_cache, quantize_kv, write_prefill)
+                      init_slot_cache, quantize_kv, quantize_kv_static,
+                      write_prefill)
 from .scheduler import EngineRequest, Scheduler
 
 __all__ = ["Engine", "EngineConfig", "EngineRequest", "Scheduler",
            "SlotKVCache", "init_slot_cache", "write_prefill", "clear_slot",
-           "quantize_kv", "dequantize_kv"]
+           "quantize_kv", "quantize_kv_static", "dequantize_kv"]
 
 
 def __getattr__(name):

@@ -48,11 +48,19 @@ class EngineConfig:
 
 
 class Engine:
-    """submit()/step()/drain() continuous-batching server."""
+    """submit()/step()/drain() continuous-batching server.
+
+    ``kv_scales``: optional static KV quantization constants from an
+    offline calibration recipe (``repro.calib``) — dict of
+    ``k_scale/k_zero/v_scale/v_zero`` (L, Hkv, C) arrays. Requires
+    ``kv_mode="int8"``; decode writes then skip the per-step min/max
+    reduce and scale storage amortizes to ~0 bytes/token (DESIGN.md §7).
+    """
 
     def __init__(self, cfg, params, ecfg: EngineConfig,
                  rng: Optional[jax.Array] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 kv_scales: Optional[dict] = None):
         if cfg.family not in ENGINE_FAMILIES:
             raise NotImplementedError(
                 f"engine serves transformer families {ENGINE_FAMILIES}, "
@@ -72,7 +80,8 @@ class Engine:
         self.sched = Scheduler(ecfg.n_slots, clock=clock)
         self.cache = init_slot_cache(
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
-            dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks)
+            dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks,
+            kv_scales=kv_scales)
         from repro.models import transformer
         self._decode = jax.jit(lambda p, c, t, pos:
                                transformer.decode_step_slots(p, cfg, c, t, pos))
@@ -217,5 +226,6 @@ class Engine:
             "ttft_p50_s": float(np.median(ttfts)) if ttfts else None,
             "request_tokens_per_s_mean": float(np.mean(tps)) if tps else None,
             "kv_mode": self.cache.mode,
+            "kv_static_scales": self.cache.static,
             "kv_bytes_per_token": self.cache.bytes_per_token(),
         }

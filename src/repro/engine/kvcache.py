@@ -41,7 +41,7 @@ KV_QCFG = QuantConfig(bits=8, symmetric=False)
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=("k", "v", "kv_pos", "k_scale", "k_zero",
                                 "v_scale", "v_zero"),
-                   meta_fields=("mode", "qchunks"))
+                   meta_fields=("mode", "qchunks", "static"))
 @dataclasses.dataclass
 class SlotKVCache:
     """Slot-indexed decode cache (one layer stack, or one layer inside
@@ -50,8 +50,13 @@ class SlotKVCache:
 
     mode="fp":   k/v (L, N, T, Hkv, D) in a float dtype; scales are
                  zero-size placeholders (shape (L, N, T, Hkv, 0)).
-    mode="int8": k/v int8 codes; {k,v}_{scale,zero} (L, N, T, Hkv, C)
-                 fp32, C = qchunks contiguous sub-channel chunks per head.
+    mode="int8": k/v int8 codes; {k,v}_{scale,zero} fp32 with C = qchunks
+                 contiguous sub-channel chunks per head. Dynamic scales
+                 (static=False) are per-entry, shape (L, N, T, Hkv, C);
+                 static scales (static=True, from an offline calibration
+                 recipe) are per-layer constants, shape (L, 1, 1, Hkv, C) —
+                 writes skip the runtime min/max reduce entirely and the
+                 scale arrays are never updated.
     """
 
     k: jnp.ndarray
@@ -63,6 +68,7 @@ class SlotKVCache:
     v_zero: jnp.ndarray
     mode: str = "fp"
     qchunks: int = 4
+    static: bool = False
 
     @property
     def n_slots(self) -> int:
@@ -73,33 +79,59 @@ class SlotKVCache:
         return self.k.shape[-3]
 
     def bytes_per_token(self) -> float:
-        """Storage bytes per cached token per layer (both K and V)."""
+        """Storage bytes per cached token per layer (both K and V).
+        Static scales are per-layer constants — amortized to ~0/token."""
         Hkv, D = self.k.shape[-2], self.k.shape[-1]
         per_elt = self.k.dtype.itemsize
-        per_chunk = 2 * 4 * self.k_scale.shape[-1]      # scale+zero fp32
+        per_chunk = (0 if self.static
+                     else 2 * 4 * self.k_scale.shape[-1])   # scale+zero fp32
         return 2 * (Hkv * D * per_elt + Hkv * per_chunk)
 
 
 def init_slot_cache(cfg, n_slots: int, max_len: int, *, mode: str = "fp",
-                    dtype=jnp.float32, qchunks: int = 4) -> SlotKVCache:
-    """Preallocate the engine cache for a transformer-family config."""
+                    dtype=jnp.float32, qchunks: int = 4,
+                    kv_scales: Optional[dict] = None) -> SlotKVCache:
+    """Preallocate the engine cache for a transformer-family config.
+
+    ``kv_scales`` (int8 mode only): precomputed static quantization
+    parameters from an offline calibration recipe — a dict with keys
+    ``k_scale / k_zero / v_scale / v_zero``, each (L, Hkv, C) fp32. When
+    given, decode writes quantize with these constants instead of running
+    the per-step min/max reduce (dynamic ranges stay the default).
+    """
     if mode not in ("fp", "int8"):
         raise ValueError(f"unknown KV cache mode {mode!r}")
+    if kv_scales is not None and mode != "int8":
+        raise ValueError("static kv_scales require mode='int8'")
     L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
     if mode == "int8" and D % qchunks:
         raise ValueError(f"head_dim {D} not divisible by qchunks {qchunks}")
     shape = (L, n_slots, max_len, Hkv, D)
     C = qchunks if mode == "int8" else 0
-    sshape = (L, n_slots, max_len, Hkv, C)
     kv_dtype = jnp.int8 if mode == "int8" else dtype
+    kv = dict(k=jnp.zeros(shape, kv_dtype), v=jnp.zeros(shape, kv_dtype),
+              kv_pos=jnp.full((L, n_slots, max_len), -1, jnp.int32))
+    if kv_scales is not None:
+        expect = (L, Hkv, qchunks)
+        got = {}
+        for kk in ("k_scale", "k_zero", "v_scale", "v_zero"):
+            arr = jnp.asarray(kv_scales[kk], jnp.float32)
+            if tuple(arr.shape) != expect:
+                raise ValueError(
+                    f"static kv_scales[{kk!r}] has shape {tuple(arr.shape)}"
+                    f", expected (L, Hkv, qchunks) = {expect} — was the "
+                    f"recipe calibrated with a different qchunks or arch?")
+            got[kk] = arr.reshape(L, 1, 1, Hkv, qchunks)
+        return SlotKVCache(**kv, **got, mode=mode, qchunks=qchunks,
+                           static=True)
+    sshape = (L, n_slots, max_len, Hkv, C)
     # scales init to 1 (not 0): unwritten entries must dequantize to a
     # finite 0, because masked-out attention rows still flow through the
     # p·V einsum where 0·NaN would poison the output.
     one = functools.partial(jnp.ones, dtype=jnp.float32)
     zero = functools.partial(jnp.zeros, dtype=jnp.float32)
     return SlotKVCache(
-        k=jnp.zeros(shape, kv_dtype), v=jnp.zeros(shape, kv_dtype),
-        kv_pos=jnp.full((L, n_slots, max_len), -1, jnp.int32),
+        **kv,
         k_scale=one(sshape), k_zero=zero(sshape),
         v_scale=one(sshape), v_zero=zero(sshape),
         mode=mode, qchunks=qchunks)
@@ -118,6 +150,28 @@ def quantize_kv(x: jnp.ndarray, qchunks: int):
     scale, zero = qparams(beta, alpha, KV_QCFG)
     q = quantize(xc, scale[..., None], zero[..., None], KV_QCFG)
     return q.reshape(x.shape), scale, zero
+
+
+def quantize_kv_static(x: jnp.ndarray, scale: jnp.ndarray,
+                       zero: jnp.ndarray) -> jnp.ndarray:
+    """x (..., Hkv, D), scale/zero broadcastable (..., Hkv, C) → int8 codes.
+
+    Static-scale write: no range pass at all — a single fused
+    scale+round+clip over the activation (the decode-critical-path win a
+    calibration recipe buys; cf. the dynamic `quantize_kv` above).
+
+    Unlike the runtime path (paper eq. 3 rounds the zero-point to an
+    integer), offline scales carry an EXACT fractional zero-point folded
+    into the rounding — ``q = rint(S·x + Z)`` — which removes the
+    zero-rounding error term entirely; dequantization ``(q - Z)/S`` is
+    unchanged (fractional Z is just another float).
+    """
+    *lead, H, D = x.shape
+    C = scale.shape[-1]
+    xc = x.reshape(*lead, H, C, D // C).astype(jnp.float32)
+    q = jnp.clip(jnp.rint(scale[..., None] * xc + zero[..., None]),
+                 KV_QCFG.qmin, KV_QCFG.qmax)
+    return q.astype(jnp.int8).reshape(x.shape)
 
 
 def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
@@ -149,7 +203,20 @@ def slot_layer_update(cl: SlotKVCache, k_new, v_new, positions):
         return jax.lax.dynamic_update_slice(
             buf, new.astype(buf.dtype), (t,) + (0,) * (buf.ndim - 1))
 
-    if cl.mode == "int8":
+    if cl.mode == "int8" and cl.static:
+        # static scales: quantize with the calibrated per-layer constants —
+        # no min/max reduce, and the scale arrays are never written
+        qk = quantize_kv_static(k_new, cl.k_scale, cl.k_zero)
+        qv = quantize_kv_static(v_new, cl.v_scale, cl.v_zero)
+        new_cl = dataclasses.replace(
+            cl,
+            k=jax.vmap(upd)(cl.k, qk, slot_t),
+            v=jax.vmap(upd)(cl.v, qv, slot_t),
+            kv_pos=jax.vmap(upd)(cl.kv_pos, positions.astype(jnp.int32),
+                                 slot_t))
+        k_full = dequantize_kv(new_cl.k, cl.k_scale, cl.k_zero, k_new.dtype)
+        v_full = dequantize_kv(new_cl.v, cl.v_scale, cl.v_zero, v_new.dtype)
+    elif cl.mode == "int8":
         qk, ks, kz = quantize_kv(k_new, cl.qchunks)        # (N,1,H,D)/(N,1,H,C)
         qv, vs, vz = quantize_kv(v_new, cl.qchunks)
         new_cl = dataclasses.replace(
@@ -205,6 +272,16 @@ def write_prefill(cache: SlotKVCache, slot: int, prefill_cache,
         return jax.lax.dynamic_update_slice(
             buf, row[:, None].astype(buf.dtype), idx)
 
+    if cache.mode == "int8" and cache.static:
+        # per-layer static constants: index as (L, Hkv, C) for the (L, S,
+        # Hkv, D) prefill block, then write codes only
+        ks, kz = cache.k_scale[:, 0], cache.k_zero[:, 0]   # (L, 1, Hkv, C)
+        vs, vz = cache.v_scale[:, 0], cache.v_zero[:, 0]
+        qk = quantize_kv_static(k, ks, kz)
+        qv = quantize_kv_static(v, vs, vz)
+        return dataclasses.replace(
+            cache, k=put(cache.k, qk), v=put(cache.v, qv),
+            kv_pos=put(cache.kv_pos, pos_row))
     if cache.mode == "int8":
         qk, ks, kz = quantize_kv(k, cache.qchunks)
         qv, vs, vz = quantize_kv(v, cache.qchunks)

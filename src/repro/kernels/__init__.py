@@ -1,11 +1,14 @@
 """Pallas TPU kernels for the SplitQuant hot path (fused dequant-matmul),
 plus packing utilities and the pure-jnp oracle used for validation."""
 from . import act_quant, ops, packing, ref
-from .act_quant import act_split_quantize, act_split_quantize_ref
+from .act_quant import (act_split_quantize, act_split_quantize_ref,
+                        act_split_quantize_static,
+                        act_split_quantize_static_ref)
 from .ops import linear, quantized_matmul, pack_for_kernel, dequant_constants
 from .splitquant_matmul import splitquant_matmul
 
 __all__ = ["ops", "ref", "packing", "act_quant", "linear",
            "quantized_matmul", "pack_for_kernel", "dequant_constants",
            "splitquant_matmul", "act_split_quantize",
-           "act_split_quantize_ref"]
+           "act_split_quantize_ref", "act_split_quantize_static",
+           "act_split_quantize_static_ref"]

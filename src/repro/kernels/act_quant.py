@@ -74,6 +74,91 @@ def act_split_quantize(x: jnp.ndarray, *, bits: int = 8, n_chunks: int = 3,
     )(x)
 
 
+def _static_kernel(x_ref, scale_ref, zero_ref, q_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                 # (br, cw)
+    scale = scale_ref[0, 0]
+    zero = zero_ref[0, 0]
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    # offline zero-points are exact (fractional) and folded into the
+    # rounding — no eq.-3 zero-rounding error term on the static path
+    q_ref[...] = jnp.clip(jnp.rint(scale * x + zero), qmin,
+                          qmax).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r", "interpret"))
+def act_split_quantize_static(x: jnp.ndarray, scale: jnp.ndarray,
+                              zero: jnp.ndarray, *, bits: int = 8,
+                              block_r: int = 256, interpret: bool = False):
+    """Static-scale variant: quantize with precomputed per-chunk (S, Z)
+    from an offline calibration recipe. x: (R, N), scale/zero:
+    (n_chunks,) → q int8 (R, N).
+
+    No in-kernel range reduce — one scale+round+clip pass, which removes
+    the runtime min/max from the serving hot path. Use the dynamic
+    `act_split_quantize` as the fallback when no recipe is loaded.
+
+    Indivisible widths use the same uneven `array_split` chunking the
+    calibration stats were collected with (one pallas_call per chunk
+    width; equal widths fuse into a single 2-D grid).
+    """
+    from repro.core.splitquant import activation_chunk_bounds
+
+    R, N = x.shape
+    n_chunks = scale.shape[-1]
+    assert R % block_r == 0, (x.shape, block_r)
+    kernel = functools.partial(_static_kernel, bits=bits)
+    scale = scale.reshape(1, n_chunks).astype(jnp.float32)
+    zero = zero.reshape(1, n_chunks).astype(jnp.float32)
+    if N % n_chunks == 0:
+        cw = N // n_chunks
+        return pl.pallas_call(
+            kernel,
+            grid=(R // block_r, n_chunks),
+            in_specs=[
+                pl.BlockSpec((block_r, cw), lambda i, j: (i, j)),
+                pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+                pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((block_r, cw), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((R, N), jnp.int8),
+            interpret=interpret,
+        )(x, scale, zero)
+    bounds = activation_chunk_bounds(N, n_chunks)
+    outs = []
+    for c, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        outs.append(pl.pallas_call(
+            kernel,
+            grid=(R // block_r, 1),
+            in_specs=[
+                pl.BlockSpec((block_r, hi - lo), lambda i, j: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_r, hi - lo), lambda i, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((R, hi - lo), jnp.int8),
+            interpret=interpret,
+        )(x[:, lo:hi], scale[:, c:c + 1], zero[:, c:c + 1]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def act_split_quantize_static_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                                  zero: jnp.ndarray, *, bits: int = 8):
+    """Pure-jnp oracle for the static-scale kernel (fractional zero folded
+    into the rounding, matching `quantize_kv_static`; uneven array_split
+    chunks for indivisible widths)."""
+    from repro.core.splitquant import activation_chunk_bounds
+    R, N = x.shape
+    n_chunks = scale.shape[-1]
+    bounds = activation_chunk_bounds(N, n_chunks)
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    outs = []
+    for c, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        xc = x[:, lo:hi].astype(jnp.float32)
+        outs.append(jnp.clip(jnp.rint(scale[c] * xc + zero[c]), qmin, qmax))
+    return jnp.concatenate(outs, axis=1).astype(jnp.int8)
+
+
 def act_split_quantize_ref(x: jnp.ndarray, *, bits: int = 8,
                            n_chunks: int = 3):
     """Pure-jnp oracle (per-row per-chunk ranges, eqs. 1-3)."""
@@ -89,8 +174,21 @@ def act_split_quantize_ref(x: jnp.ndarray, *, bits: int = 8,
 
 
 def dequantize_act(q, scale, zero, dtype=jnp.float32):
+    """Works for both layouts: dynamic per-row scale/zero (R, n_chunks)
+    and static per-tensor scale/zero (n_chunks,), including static scales
+    over uneven (array_split) chunk widths."""
     R, N = q.shape
     n_chunks = scale.shape[-1]
+    if N % n_chunks:
+        from repro.core.splitquant import activation_chunk_bounds
+        assert scale.ndim == 1, "uneven chunks require static (1-D) scales"
+        bounds = activation_chunk_bounds(N, n_chunks)
+        outs = [(q[:, lo:hi].astype(jnp.float32) - zero[c]) / scale[c]
+                for c, (lo, hi) in enumerate(zip(bounds, bounds[1:]))]
+        return jnp.concatenate(outs, axis=1).astype(dtype)
+    if scale.ndim == 1:
+        scale = scale[None]
+        zero = zero[None]
     qc = q.reshape(R, n_chunks, N // n_chunks).astype(jnp.float32)
     x = (qc - zero[..., None]) / scale[..., None]
     return x.reshape(R, N).astype(dtype)

@@ -7,10 +7,23 @@ synchronous loop for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --reduced --bits 2 --method splitquant --requests 4 --kv-mode int8
+
+Calibrated serving (repro.calib): `--save-recipe DIR` runs the offline
+step once — quantize the weights (honoring any recipe policies), collect
+KV range statistics on calibration prompts, and write a QuantRecipe +
+quantized checkpoint. `--recipe DIR` then serves from that directory:
+weights restore pre-quantized (no k-means at startup) and the INT8 KV
+cache uses the recipe's static scales (no per-step min/max reduce).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --reduced --bits 2 --save-recipe /tmp/rec
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --reduced --recipe /tmp/rec --kv-mode int8
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import numpy as np
@@ -20,6 +33,73 @@ from repro.core import QuantConfig, QuantPolicy, quantize_tree
 from repro.engine import Engine, EngineConfig
 from repro.models import get_model
 from repro.runtime.serve_loop import Request, ServeConfig, Server
+
+
+def load_recipe_params(recipe_dir, params, arch=None, reduced=None):
+    """(params, recipe, kv_scales) from a saved QuantRecipe: restore the
+    pre-quantized checkpoint if the recipe points at one (no k-means),
+    else apply the recipe's per-path policies to `params`.
+
+    ``arch``/``reduced``: when given, validated against the recipe's
+    provenance — a mismatched recipe otherwise dies deep inside a
+    checkpoint lookup or a shape error with no hint of the real cause.
+    """
+    from repro.calib import QuantRecipe
+    from repro.checkpoint import ckpt
+
+    rec = QuantRecipe.load(recipe_dir)
+    if arch is not None and rec.arch and rec.arch != arch:
+        raise ValueError(f"recipe {recipe_dir!r} was calibrated for arch "
+                         f"{rec.arch!r}, serving {arch!r}")
+    if reduced is not None and "reduced" in rec.meta \
+            and bool(rec.meta["reduced"]) != bool(reduced):
+        raise ValueError(f"recipe {recipe_dir!r} was calibrated with "
+                         f"reduced={rec.meta['reduced']}, serving "
+                         f"reduced={reduced}")
+    ck = rec.resolve_ckpt_dir(recipe_dir)
+    if ck is not None:
+        params, step = ckpt.restore(ck, params)
+        print(f"recipe: restored pre-quantized weights (step {step}) — "
+              f"no k-means at startup")
+    elif rec.policies:
+        params, report = quantize_tree(
+            jax.random.PRNGKey(0), params,
+            QuantPolicy(), overrides=rec.policies)
+        print(f"recipe: quantized {len(report['quantized'])} tensors from "
+              f"recipe policies ({report['deployed_bytes']/2**20:.1f} MiB)")
+    return params, rec, rec.kv_scales
+
+
+def save_recipe(recipe_dir, cfg, model, params, args) -> None:
+    """Offline calibration: quantize weights, measure KV ranges, persist
+    QuantRecipe + quantized checkpoint under `recipe_dir`."""
+    from repro.calib import QuantRecipe, collect_kv_stats, kv_static_scales
+    from repro.checkpoint import ckpt
+
+    policy = QuantPolicy(cfg=QuantConfig(bits=args.bits), method=args.method)
+    qparams_tree, report = quantize_tree(jax.random.PRNGKey(0), params,
+                                         policy)
+    kv_scales = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        rng = np.random.default_rng(0)
+        # long calibration prompts: RoPE'd K ranges are position-dependent,
+        # so coverage must extend past the serving prompt lengths
+        calib = [rng.integers(0, cfg.vocab, size=(4, 48)) for _ in range(4)]
+        kv_scales = kv_static_scales(
+            collect_kv_stats(cfg, qparams_tree, calib, qchunks=4))
+    os.makedirs(recipe_dir, exist_ok=True)
+    ckpt.save(os.path.join(recipe_dir, "ckpt"), 0, qparams_tree)
+    rec = QuantRecipe(
+        name=f"{cfg.name}-int{args.bits}-{args.method}",
+        arch=args.arch,
+        policies={p: {"bits": d["bits"], "k": d["k"], "method": d["method"]}
+                  for p, d in report["per_path"].items()},
+        kv_scales=kv_scales, kv_qchunks=4, ckpt_dir="ckpt",
+        meta={"deployed_bytes": report["deployed_bytes"],
+              "orig_bytes": report["orig_bytes"], "reduced": args.reduced})
+    rec.save(recipe_dir)
+    print(f"saved recipe + quantized ckpt to {recipe_dir} "
+          f"({report['deployed_bytes']/2**20:.1f} MiB deployed)")
 
 
 def main():
@@ -40,6 +120,12 @@ def main():
                          "chunked-range quantization of K/V at rest)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
+    ap.add_argument("--recipe", default=None,
+                    help="serve from a saved calibration recipe dir: "
+                         "pre-quantized weights + static KV scales")
+    ap.add_argument("--save-recipe", default=None,
+                    help="run offline calibration, write recipe + "
+                         "quantized ckpt to this dir, and exit")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -53,7 +139,19 @@ def main():
         (params, _), step = ckpt.restore(args.ckpt_dir, (params, None))
         print(f"restored step {step}")
 
-    if args.method != "none":
+    if args.save_recipe:
+        save_recipe(args.save_recipe, cfg, model, params, args)
+        return
+
+    kv_scales = None
+    kv_qchunks = 4
+    if args.recipe:
+        params, rec, kv_scales = load_recipe_params(
+            args.recipe, params, arch=args.arch, reduced=args.reduced)
+        kv_qchunks = rec.kv_qchunks        # scales are (L, Hkv, kv_qchunks)
+        if kv_scales is not None and args.kv_mode != "int8":
+            kv_scales = None               # static scales only apply to int8
+    elif args.method != "none":
         policy = QuantPolicy(cfg=QuantConfig(bits=args.bits),
                              method=args.method)
         params, report = quantize_tree(key, params, policy)
@@ -82,7 +180,9 @@ def main():
 
     eng = Engine(cfg, params, EngineConfig(
         n_slots=args.slots, max_len=256,
-        max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode))
+        max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
+        kv_qchunks=kv_qchunks),
+        kv_scales=kv_scales)
     for p in prompts:
         eng.submit(p)
     for r in eng.drain():
@@ -90,7 +190,8 @@ def main():
               f"(ttft {r.ttft*1e3:.0f} ms, {r.tokens_per_s:.1f} tok/s)")
     m = eng.metrics()
     print(f"engine: {m['tokens_per_s']:.1f} tok/s, "
-          f"util {m['slot_utilization']:.0%}, kv={m['kv_mode']} "
+          f"util {m['slot_utilization']:.0%}, kv={m['kv_mode']}"
+          f"{'/static' if m['kv_static_scales'] else ''} "
           f"({m['kv_bytes_per_token']:.0f} B/token/layer)")
 
 

@@ -53,13 +53,42 @@ def init(key, cfg, n_classes: int, max_len: int = 128):
     }
 
 
-def forward(params, cfg, batch, *, act_quant=None, act_chunks: int = 1):
+#: activation tap sites instrumented for calibration (repro.calib.stats) —
+#: exactly the §4.2 quantization points the ``aq()`` closure covers
+ACT_SITES = ("attn_in", "attn_out", "ffn_in", "ffn_hidden")
+
+
+def _site_stats(h, n_chunks: int, percentile: float):
+    """Range statistics of one activation tensor: whole-tensor min/max,
+    symmetric percentile clip points, and per-chunk (§4.2) min/max along
+    the feature axis (uneven `array_split` chunks for any width)."""
+    from repro.core import activation_chunk_bounds
+    hf = h.astype(jnp.float32)
+    bounds = activation_chunk_bounds(h.shape[-1], n_chunks)
+    cmin = jnp.stack([jnp.min(hf[..., lo:hi])
+                      for lo, hi in zip(bounds, bounds[1:])])
+    cmax = jnp.stack([jnp.max(hf[..., lo:hi])
+                      for lo, hi in zip(bounds, bounds[1:])])
+    return {"min": jnp.min(hf), "max": jnp.max(hf),
+            "p_lo": jnp.percentile(hf, (1 - percentile) * 100),
+            "p_hi": jnp.percentile(hf, percentile * 100),
+            "chunk_min": cmin, "chunk_max": cmax}
+
+
+def forward(params, cfg, batch, *, act_quant=None, act_chunks: int = 1,
+            collect_stats=None):
     """batch: {tokens (B,S), mask (B,S) 1=real} → logits (B, n_classes).
 
     ``act_quant``: optional QuantConfig for simulated ACTIVATION
     quantization (paper §4.2). ``act_chunks=3`` applies the SplitQuant
     activation split (per-chunk dynamic ranges); 1 = whole-tensor range
     (the baseline an int engine would use).
+
+    ``collect_stats``: optional ``{"n_chunks": int, "percentile": float}``
+    — the calibration instrumentation. Per-layer range statistics are
+    emitted at every ``aq()`` tap site *through the layer scan* (each stat
+    leaf gains a leading L axis) and the return value becomes
+    ``(logits, {site: stats})``. See ``repro.calib.stats``.
     """
     from repro.core import split_activation_fake_quant
 
@@ -82,7 +111,15 @@ def forward(params, cfg, batch, *, act_quant=None, act_chunks: int = 1):
 
     def layer(x, lp):
         a = lp["attn"]
-        x = aq(x)
+        stats = {}
+
+        def tap(site, h):
+            if collect_stats is not None:
+                stats[site] = _site_stats(h, collect_stats["n_chunks"],
+                                          collect_stats["percentile"])
+            return aq(h)
+
+        x = tap("attn_in", x)
         q = dense(x, a["wq"], a["bq"]).reshape(B, S, H, D)
         k = dense(x, a["wk"], a["bk"]).reshape(B, S, H, D)
         v = dense(x, a["wv"], a["bv"]).reshape(B, S, H, D)
@@ -90,20 +127,25 @@ def forward(params, cfg, batch, *, act_quant=None, act_chunks: int = 1):
         o = jax.vmap(lambda qi, ki, vi, pi: attend(
             qi[None], ki[None], vi[None], positions, pi,
             causal=False)[0])(q, k, v, kv_pos_b)
-        o = aq(o.reshape(B, S, H * D))
+        o = tap("attn_out", o.reshape(B, S, H * D))
         x = layer_norm(x + dense(o, a["wo"], a["bo"]),
                        lp["ln1"]["norm_scale"], lp["ln1"]["norm_bias"])
-        h = jax.nn.gelu(dense(aq(x), lp["ffn"]["w_up"], lp["ffn"]["b_up"]))
-        h = dense(aq(h), lp["ffn"]["w_down"], lp["ffn"]["b_down"])
+        h = jax.nn.gelu(dense(tap("ffn_in", x), lp["ffn"]["w_up"],
+                              lp["ffn"]["b_up"]))
+        h = dense(tap("ffn_hidden", h), lp["ffn"]["w_down"],
+                  lp["ffn"]["b_down"])
         x = layer_norm(x + h, lp["ln2"]["norm_scale"],
                        lp["ln2"]["norm_bias"])
-        return x, None
+        return x, (stats if collect_stats is not None else None)
 
-    x, _ = jax.lax.scan(layer, x, params["layers"])
+    x, layer_stats = jax.lax.scan(layer, x, params["layers"])
     cls = x[:, 0]
     pooled = jnp.tanh(dense(cls, params["pooler"]["w"], params["pooler"]["b"]))
-    return dense(pooled, params["classifier"]["w"],
-                 params["classifier"]["b"]).astype(jnp.float32)
+    logits = dense(pooled, params["classifier"]["w"],
+                   params["classifier"]["b"]).astype(jnp.float32)
+    if collect_stats is not None:
+        return logits, layer_stats
+    return logits
 
 
 def loss_fn(params, cfg, batch, **_):

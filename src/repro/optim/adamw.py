@@ -3,7 +3,7 @@ int8 gradient compression with error feedback.
 
 State-dtype control matters at scale: fp32 m/v for a 405B model is 3.2 TB;
 bf16 states + stochastic-rounding-free update keeps the dry-run memory
-budget honest (DESIGN.md §7). Gradient compression halves (int8: quarters)
+budget honest (DESIGN.md §8). Gradient compression halves (int8: quarters)
 the all-reduce bytes on the data axis — the collective roofline term.
 """
 from __future__ import annotations

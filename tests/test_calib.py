@@ -1,0 +1,269 @@
+"""Calibration subsystem: stats collection, sensitivity, greedy
+allocation, recipe (de)serialization, per-path quantize_tree overrides,
+quantized-checkpoint roundtrip, and the static act-quant kernel."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.calib import (QuantRecipe, act_static_scales, best_uniform_within,
+                         collect_act_stats, collect_kv_stats,
+                         greedy_allocate, kv_static_scales,
+                         layer_sensitivity, uniform_bytes)
+from repro.checkpoint import ckpt
+from repro.configs import get_arch
+from repro.core import (QuantConfig, QuantPolicy, SplitQuantTensor,
+                        activation_chunk_bounds, quantize_tree,
+                        resolve_policy)
+from repro.models import bert_tiny, get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bert():
+    cfg = get_arch("bert-tiny")
+    params = bert_tiny.init(KEY, cfg, n_classes=4, max_len=24)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(1, cfg.vocab, size=(16, 24),
+                                    dtype=np.int32),
+             "mask": np.ones((16, 24), np.int32)}
+    return cfg, params, batch
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    params = get_model(cfg).init(KEY, cfg)
+    return cfg, params
+
+
+# ------------------------------------------------ percentile normalization --
+def test_percentile_default_single_path():
+    """Regression: method="percentile" with an unset percentile must fall
+    back to 0.99 through the same code path as an explicit value."""
+    pol = QuantPolicy(cfg=QuantConfig(bits=4, percentile=None),
+                      method="percentile")
+    assert resolve_policy(pol).cfg.percentile == 0.99
+    explicit = QuantPolicy(cfg=QuantConfig(bits=4, percentile=0.95),
+                           method="percentile")
+    assert resolve_policy(explicit).cfg.percentile == 0.95
+    # baseline never clips, even if a percentile was set on the config
+    base = QuantPolicy(cfg=QuantConfig(bits=4, percentile=0.95),
+                       method="baseline")
+    assert resolve_policy(base).cfg.percentile is None
+
+
+def test_percentile_tree_equals_explicit_default():
+    w = {"layers": {"ffn": {"w_up": jax.random.normal(KEY, (64, 32))}}}
+    q_none, _ = quantize_tree(KEY, w, QuantPolicy(
+        cfg=QuantConfig(bits=4, percentile=None), method="percentile"))
+    q_99, _ = quantize_tree(KEY, w, QuantPolicy(
+        cfg=QuantConfig(bits=4, percentile=0.99), method="percentile"))
+    np.testing.assert_array_equal(
+        np.asarray(q_none["layers"]["ffn"]["w_up"].q),
+        np.asarray(q_99["layers"]["ffn"]["w_up"].q))
+
+
+# --------------------------------------------------------- tree overrides --
+def test_quantize_tree_honors_per_path_overrides():
+    w = {"layers": {"attn": {"wq": jax.random.normal(KEY, (32, 32))},
+                    "ffn": {"w_up": jax.random.normal(KEY, (32, 64)),
+                            "w_down": jax.random.normal(KEY, (64, 32))}}}
+    overrides = {"layers/attn/wq": {"bits": 2, "k": 2},
+                 "layers/ffn/w_up": {"bits": 8},
+                 "layers/ffn/w_down": {"method": "none"}}
+    qt, report = quantize_tree(KEY, w, QuantPolicy(cfg=QuantConfig(bits=4)),
+                               overrides=overrides)
+    wq = qt["layers"]["attn"]["wq"]
+    assert (wq.bits, wq.k) == (2, 2)
+    assert qt["layers"]["ffn"]["w_up"].bits == 8
+    # method "none" leaves the leaf dense
+    assert not isinstance(qt["layers"]["ffn"]["w_down"], SplitQuantTensor)
+    assert report["per_path"]["layers/attn/wq"]["bits"] == 2
+    assert "layers/ffn/w_down" in report["skipped"]
+
+
+def test_quantize_tree_rejects_unknown_override_paths():
+    w = {"ffn": {"w": jax.random.normal(KEY, (32, 32))}}
+    with pytest.raises(ValueError, match="matched no quantizable leaf"):
+        quantize_tree(KEY, w, QuantPolicy(), overrides={"nope": {"bits": 2}})
+    with pytest.raises(ValueError, match="unknown override keys"):
+        quantize_tree(KEY, w, QuantPolicy(),
+                      overrides={"ffn/w": {"bitz": 2}})
+
+
+# ------------------------------------------------------------- act stats ---
+def test_collect_act_stats_shapes_and_bounds(bert):
+    cfg, params, batch = bert
+    half = {k: v[:8] for k, v in batch.items()}
+    stats = collect_act_stats(cfg, params, [half, batch], n_chunks=3)
+    assert stats.n_batches == 2
+    L = cfg.n_layers
+    for site in bert_tiny.ACT_SITES:
+        d = stats.sites[site]
+        assert d["min"].shape == (L,) and d["chunk_min"].shape == (L, 3)
+        assert np.all(d["min"] <= d["max"])
+        assert np.all(d["chunk_min"] >= d["min"][:, None] - 1e-6)
+        assert np.all(d["chunk_max"] <= d["max"][:, None] + 1e-6)
+        assert np.all(d["p_lo"] >= d["min"]) and np.all(d["p_hi"] <= d["max"])
+    scales = act_static_scales(stats)
+    for site in bert_tiny.ACT_SITES:
+        assert scales[site]["scale"].shape == (L, 3)
+        assert np.all(scales[site]["scale"] > 0)
+
+
+def test_activation_chunk_bounds_uneven():
+    assert activation_chunk_bounds(97, 3) == [0, 33, 65, 97]
+    assert activation_chunk_bounds(96, 3) == [0, 32, 64, 96]
+    assert activation_chunk_bounds(5, 8) == [0, 1, 2, 3, 4, 5]
+
+
+# --------------------------------------------------- sensitivity + budget ---
+def test_sensitivity_and_allocation(bert):
+    cfg, params, batch = bert
+    table = layer_sensitivity(
+        KEY, cfg, params, lambda p, b: bert_tiny.forward(p, cfg, b),
+        batch, bits_list=(2, 8))
+    assert table, "no quantizable groups found"
+    for path, row in table.items():
+        pb = row["per_bits"]
+        assert set(pb) == {2, 8}
+        # more bits can only help on the calibration objective
+        assert pb[8]["mse"] <= pb[2]["mse"] + 1e-9
+        assert pb[2]["bytes"] < pb[8]["bytes"]
+
+    b_lo, b_hi = uniform_bytes(table, 2), uniform_bytes(table, 8)
+    # at the minimum budget everything stays at 2 bits
+    lo = greedy_allocate(table, b_lo)
+    assert set(lo["assignment"].values()) == {2} and lo["feasible"]
+    # at the max budget everything is upgraded (every upgrade has gain>=0;
+    # allow ties where a group's error is already 0)
+    hi = greedy_allocate(table, b_hi)
+    assert hi["total_bytes"] <= b_hi
+    # midpoint: mixed assignment within budget, uniform can only do 2 bits
+    mid = greedy_allocate(table, (b_lo + b_hi) // 2)
+    assert b_lo <= mid["total_bytes"] <= (b_lo + b_hi) // 2
+    assert best_uniform_within(table, (b_lo + b_hi) // 2) == 2
+    assert 2 <= mid["avg_bits"] <= 8
+    # infeasible budget: minimum assignment returned, flagged
+    broke = greedy_allocate(table, b_lo - 1)
+    assert not broke["feasible"]
+    assert set(broke["assignment"].values()) == {2}
+    # overrides are consumable by quantize_tree
+    qt, report = quantize_tree(KEY, params, QuantPolicy(),
+                               overrides=mid["overrides"])
+    got = {p: d["bits"] for p, d in report["per_path"].items()}
+    assert got == mid["assignment"]
+
+
+# ------------------------------------------------------- recipe roundtrip ---
+def test_recipe_json_npz_roundtrip(lm):
+    cfg, params = lm
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(2, 12)) for _ in range(2)]
+    kv = kv_static_scales(collect_kv_stats(cfg, params, calib, qchunks=4))
+    rec = QuantRecipe(
+        name="unit", arch="stablelm-1.6b",
+        policies={"layers/attn/wq": {"bits": 2, "k": 3,
+                                     "method": "splitquant"}},
+        kv_scales=kv, kv_qchunks=4,
+        act_scales={"ffn_in": {"scale": np.ones((2, 3), np.float32),
+                               "zero": np.zeros((2, 3), np.float32)}},
+        ckpt_dir="ckpt", meta={"budget": 1234})
+    with tempfile.TemporaryDirectory() as d:
+        rec.save(d)
+        got = QuantRecipe.load(d)
+    assert got.name == rec.name and got.arch == rec.arch
+    assert got.policies == rec.policies
+    assert got.kv_qchunks == 4 and got.ckpt_dir == "ckpt"
+    assert got.meta["budget"] == 1234
+    for kk, v in rec.kv_scales.items():
+        np.testing.assert_array_equal(got.kv_scales[kk], v)
+    np.testing.assert_array_equal(got.act_scales["ffn_in"]["scale"],
+                                  rec.act_scales["ffn_in"]["scale"])
+
+
+# -------------------------------------------- quantized ckpt meta roundtrip --
+def test_ckpt_quantized_roundtrip_preserves_meta(lm):
+    cfg, params = lm
+    qp, _ = quantize_tree(KEY, params, QuantPolicy(
+        cfg=QuantConfig(bits=2), k=3))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 5, qp)
+        # restore into a PLAIN fp32 tree: quantized leaves must come back
+        # as SplitQuantTensors with their saved meta (no k-means rerun)
+        restored, step = ckpt.restore(d, params)
+        # and restoring into a quantized `like` must also work
+        restored2, _ = ckpt.restore(d, qp)
+    assert step == 5
+    is_sqt = lambda l: isinstance(l, SplitQuantTensor)
+    orig = jax.tree_util.tree_leaves(qp, is_leaf=is_sqt)
+    got = jax.tree_util.tree_leaves(restored, is_leaf=is_sqt)
+    got2 = jax.tree_util.tree_leaves(restored2, is_leaf=is_sqt)
+    n_q = 0
+    for a, b, c in zip(orig, got, got2):
+        if not is_sqt(a):
+            continue
+        n_q += 1
+        for b_i in (b, c):
+            assert is_sqt(b_i)
+            assert (b_i.bits, b_i.k) == (a.bits, a.k)
+            assert b_i.orig_shape == a.orig_shape
+            assert jnp.dtype(b_i.orig_dtype) == jnp.dtype(a.orig_dtype)
+            np.testing.assert_array_equal(np.asarray(a.dequantize()),
+                                          np.asarray(b_i.dequantize()))
+    assert n_q > 0
+
+
+# ------------------------------------------------------ static act kernel ---
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("width", [96, 97, 128])
+def test_static_act_kernel_matches_ref(bits, width):
+    """Divisible and uneven (array_split) widths — 128 is the BERT-Tiny
+    d_model the calibration stats are actually collected with."""
+    from repro.kernels.act_quant import (act_split_quantize_static,
+                                         act_split_quantize_static_ref,
+                                         dequantize_act)
+    x = jax.random.normal(KEY, (256, width)) * 2
+    scale = jnp.asarray([1.3, 0.7, 2.1])
+    zero = jnp.asarray([0.5, -1.25, 3.0])      # fractional static zeros
+    qk = act_split_quantize_static(x, scale, zero, bits=bits,
+                                   interpret=True)
+    qr = act_split_quantize_static_ref(x, scale, zero, bits=bits)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(dequantize_act(qk, scale, zero)),
+                               np.asarray(dequantize_act(qr, scale, zero)),
+                               atol=1e-5)
+    qmax = 2 ** (bits - 1) - 1
+    assert int(qk.max()) <= qmax and int(qk.min()) >= -(qmax + 1)
+
+
+def test_static_act_kernel_consumes_recipe_scales(bert):
+    """End-to-end: scales calibrated by collect_act_stats on BERT-Tiny
+    (uneven 128/3 chunks) feed straight into the static kernel."""
+    from repro.kernels.act_quant import (act_split_quantize_static,
+                                         dequantize_act)
+    cfg, params, batch = bert
+    stats = collect_act_stats(cfg, params, [batch], n_chunks=3)
+    scales = act_static_scales(stats)["ffn_in"]
+    layer = 0
+    s = jnp.asarray(scales["scale"][layer])
+    z = jnp.asarray(scales["zero"][layer])
+    x = jax.random.normal(KEY, (256, cfg.d_model))
+    q = act_split_quantize_static(x, s, z, bits=8, interpret=True)
+    xd = dequantize_act(q, s, z)
+    # reconstruction bounded by each chunk's calibrated step (values inside
+    # the calibrated range; x ~ N(0,1) is well inside the activation range)
+    assert xd.shape == x.shape
+    step = 1.0 / np.asarray(s)
+    from repro.core import activation_chunk_bounds
+    bounds = activation_chunk_bounds(cfg.d_model, 3)
+    for c, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        inside = np.abs(np.asarray(x[:, lo:hi])) < 2.0
+        err = np.abs(np.asarray(xd[:, lo:hi]) - np.asarray(x[:, lo:hi]))
+        assert err[inside].max() <= step[c] + 1e-5

@@ -186,3 +186,119 @@ def test_int8_engine_first_tokens_match(setup):
         return [r.out[0] for r in eng.drain()]
 
     assert run("int8") == run("fp")
+
+
+# --------------------------------------------- static calibration scales ---
+@pytest.fixture(scope="module")
+def kv_scales(setup):
+    """Static KV scales calibrated on long random prompts (position
+    coverage past the serving prompts — RoPE'd K ranges grow with pos)."""
+    from repro.calib import collect_kv_stats, kv_static_scales
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, MAX_LEN)) for _ in range(4)]
+    return kv_static_scales(collect_kv_stats(cfg, params, calib, qchunks=4))
+
+
+def test_static_kv_decode_logits_close(setup, kv_scales):
+    """Static-scale decode logits vs the fp cache: bounded by 2.5x the
+    dynamic INT8 tolerance (calibrated global ranges are ~2.5x wider than
+    per-token dynamic ranges — measured per-token span ≈ 0.4x global), and
+    the MEAN |Δlogit| stays within the dynamic tolerance itself."""
+    from repro.engine.kvcache import write_prefill
+    from repro.models import transformer
+
+    cfg, model, params, prompts = setup
+
+    def decode_logits(kv_mode, scales=None):
+        cache = init_slot_cache(cfg, 2, MAX_LEN, mode=kv_mode,
+                                kv_scales=scales)
+        toks, pos = [], []
+        for slot, p in enumerate(prompts[:2]):
+            logits, pc = model.prefill(
+                params, cfg, {"tokens": jnp.asarray(p)[None]})
+            cache = write_prefill(cache, slot, pc, len(p))
+            toks.append(int(jnp.argmax(logits[0, -1])))
+            pos.append(len(p))
+        logits, _ = transformer.decode_step_slots(
+            params, cfg, cache, jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32))
+        return np.asarray(logits[:, -1])
+
+    lf = decode_logits("fp")
+    ls = decode_logits("int8", kv_scales)
+    diff = np.abs(ls - lf)
+    assert np.max(diff) <= 2.5 * 0.05, np.max(diff)
+    assert np.mean(diff) <= 0.05, np.mean(diff)
+
+
+def test_static_kv_greedy_tokens_match_dynamic(setup, kv_scales):
+    """Behavioral contract: the admission token (prefill-exact) AND the
+    first cache-reading decode token must match the dynamic-scale engine
+    exactly (longer horizons drift chaotically for BOTH int8 paths)."""
+    cfg, model, params, prompts = setup
+
+    def run(scales):
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=3, max_len=MAX_LEN, max_new_tokens=2,
+            prefill_bucket=8, kv_mode="int8"), kv_scales=scales)
+        for p in prompts:
+            eng.submit(p)
+        return [r.out for r in eng.drain()]
+
+    assert run(kv_scales) == run(None)
+
+
+def test_static_cache_skips_scale_storage(setup, kv_scales):
+    """Static mode stores per-layer scale constants, not per-entry arrays:
+    fewer bytes per cached token, and the scale leaves never grow with
+    slots or sequence length."""
+    cfg, model, params, prompts = setup
+    dyn = init_slot_cache(cfg, 4, MAX_LEN, mode="int8")
+    sta = init_slot_cache(cfg, 4, MAX_LEN, mode="int8", kv_scales=kv_scales)
+    assert sta.static and not dyn.static
+    assert sta.bytes_per_token() < dyn.bytes_per_token()
+    assert sta.k_scale.shape[1:3] == (1, 1)
+    assert dyn.k_scale.shape[1:3] == (4, MAX_LEN)
+    with pytest.raises(ValueError, match="static kv_scales"):
+        init_slot_cache(cfg, 4, MAX_LEN, mode="fp", kv_scales=kv_scales)
+
+
+def test_serve_from_recipe_without_kmeans(setup, kv_scales, tmp_path,
+                                          monkeypatch):
+    """A recipe + pre-quantized checkpoint must serve with NO k-means at
+    startup (quantization ran offline) and with static KV scales."""
+    from repro.calib import QuantRecipe
+    from repro.checkpoint import ckpt
+    from repro.core import QuantConfig, QuantPolicy, quantize_tree
+    from repro.launch.serve import load_recipe_params
+
+    cfg, model, params, prompts = setup
+    qp, report = quantize_tree(KEY, params, QuantPolicy(
+        cfg=QuantConfig(bits=2)))
+    ckpt.save(str(tmp_path / "ckpt"), 0, qp)
+    QuantRecipe(name="t", arch="stablelm-1.6b",
+                policies={p: {"bits": d["bits"], "k": d["k"],
+                              "method": d["method"]}
+                          for p, d in report["per_path"].items()},
+                kv_scales=kv_scales, ckpt_dir="ckpt").save(str(tmp_path))
+
+    import repro.core.kmeans as kmeans_mod
+    import repro.core.splitquant as splitquant_mod
+
+    def boom(*a, **kw):
+        raise AssertionError("k-means ran during recipe serving")
+
+    monkeypatch.setattr(kmeans_mod, "kmeans_1d", boom)
+    monkeypatch.setattr(splitquant_mod, "kmeans_1d", boom)
+    served_params, rec, scales = load_recipe_params(str(tmp_path), params)
+    assert scales is not None
+    eng = Engine(cfg, served_params, EngineConfig(
+        n_slots=2, max_len=MAX_LEN, max_new_tokens=2, prefill_bucket=8,
+        kv_mode="int8"), kv_scales=scales)
+    for p in prompts[:2]:
+        eng.submit(p)
+    fin = eng.drain()
+    assert all(len(r.out) == 2 for r in fin)
+    m = eng.metrics()
+    assert m["kv_static_scales"] is True

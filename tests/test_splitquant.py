@@ -139,9 +139,30 @@ def test_activation_split_improves_resolution_with_outlier():
     assert err_s < err_w / 4
 
 
-def test_indivisible_activation_falls_back():
-    x = jnp.ones((2, 97))
-    out = split_activation_fake_quant(x, QuantConfig(bits=8), n_chunks=3)
+def test_indivisible_width_still_splits():
+    """Regression: an axis not divisible by n_chunks must use uneven
+    (array_split) chunks, NOT silently degrade to one range — §4.2 was
+    effectively disabled for d=128 with the default 3 chunks."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (2, 97)) * 0.1
+    x = x.at[0, 0].set(100.0)          # outlier lands in chunk 0 ([0:33))
+    cfg = QuantConfig(bits=4)
+    out = split_activation_fake_quant(x, cfg, n_chunks=3)
+    assert out.shape == x.shape
+    # chunks 1-2 ([33:97)) must keep fine resolution despite the outlier —
+    # impossible if the whole 97-wide axis shared one range
+    whole = split_activation_fake_quant(x, cfg, n_chunks=1)
+    err_s = np.abs(np.asarray(out[:, 33:]) - np.asarray(x[:, 33:])).max()
+    err_w = np.abs(np.asarray(whole[:, 33:]) - np.asarray(x[:, 33:])).max()
+    assert err_s < err_w / 4
+    # uneven boundaries follow jnp.array_split semantics: 33 + 32 + 32
+    from repro.core import activation_chunk_bounds
+    assert activation_chunk_bounds(97, 3) == [0, 33, 65, 97]
+
+
+def test_more_chunks_than_width_clamps():
+    x = jnp.ones((2, 2))
+    out = split_activation_fake_quant(x, QuantConfig(bits=8), n_chunks=5)
     assert out.shape == x.shape
 
 
