@@ -6,10 +6,19 @@ tokens, a minority want many. In a wave, every batch slot is held until
 the wave's longest member finishes; the engine retires and refills slots
 per step, so the long tail no longer stalls short requests.
 
+The INT8 cache is additionally served two ways: the legacy
+materialize-then-attend read (dequantize the whole slot cache per decode
+step) and the fused dequant-in-kernel read (`--fused` path,
+`repro.kernels.decode_attention`) — the fused-vs-materialized delta and
+per-decode-step latency percentiles are tracked per PR. `--max-len`
+defaults to 512 so the cache is deep enough for the read path to
+dominate the step.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --requests 24
 
-Emits BENCH_serve.json next to this file (tokens/s, TTFT, speedup, and
-the INT8-KV vs fp token agreement) so the perf trajectory accumulates.
+Emits BENCH_serve.json next to this file (tokens/s, per-step p50/p95,
+TTFT, speedups, and greedy token agreement across every pair of paths)
+so the perf trajectory accumulates.
 """
 import argparse
 import json
@@ -29,9 +38,11 @@ from repro.runtime.serve_loop import Request, ServeConfig, Server  # noqa: E402
 
 
 def make_workload(rng, n_requests, vocab, long_every=6,
-                  short_tokens=8, long_tokens=64):
+                  short_tokens=16, long_tokens=96):
     """Mixed lengths: mostly short prompts/generations, every `long_every`-th
-    request is a long one (the wave-stalling tail)."""
+    request is a long one (the wave-stalling tail). Generation lengths are
+    sized so decode dominates the wall at max_len 512 — the serving regime
+    the fused cache read targets (admissions amortize over ~30 steps)."""
     reqs = []
     for i in range(n_requests):
         is_long = (i % long_every) == long_every - 1
@@ -41,29 +52,46 @@ def make_workload(rng, n_requests, vocab, long_every=6,
     return reqs
 
 
-def run_wave(cfg, params, workload, scfg):
-    srv = Server(cfg, params, scfg)
-    reqs = [Request(i, p.copy(), max_new_tokens=b)
-            for i, (p, b) in enumerate(workload)]
-    t0 = time.perf_counter()
-    out = srv.serve(reqs)
-    wall = time.perf_counter() - t0
-    total = sum(len(r.out) for r in out)
-    return out, {"wall_s": wall, "total_tokens": total,
-                 "tokens_per_s": total / wall}
+def run_wave(srv, workload, repeats=1):
+    """Best-of-`repeats`, same treatment as `run_engine` — comparing a
+    best-of-N engine against a single wave sample would bias the tracked
+    speedup upward on a noisy box. `srv` is constructed ONCE by the
+    caller: `Server.__init__` jits its decode per instance, so a fresh
+    Server per repeat would put XLA compile time inside every wave wall
+    while the engine repeats hit the process-wide jit cache."""
+    best = None
+    for _ in range(repeats):
+        reqs = [Request(i, p.copy(), max_new_tokens=b)
+                for i, (p, b) in enumerate(workload)]
+        t0 = time.perf_counter()
+        out = srv.serve(reqs)
+        wall = time.perf_counter() - t0
+        total = sum(len(r.out) for r in out)
+        m = {"wall_s": wall, "total_tokens": total,
+             "tokens_per_s": total / wall}
+        if best is None or m["tokens_per_s"] > best[1]["tokens_per_s"]:
+            best = (out, m)
+    return best
 
 
-def run_engine(cfg, params, workload, ecfg):
-    eng = Engine(cfg, params, ecfg)
-    for p, b in workload:
-        eng.submit(p, max_new_tokens=b)
-    t0 = time.perf_counter()
-    fin = eng.drain()
-    wall = time.perf_counter() - t0
-    m = eng.metrics()
-    m["wall_s"] = wall
-    m["tokens_per_s"] = m["total_tokens"] / wall
-    return fin, m
+def run_engine(cfg, params, workload, ecfg, repeats=1):
+    """Best-of-`repeats` run (greedy decoding: outputs are identical
+    across repeats, so the fastest run is the steady-state measurement —
+    sub-second walls on a shared box otherwise measure scheduler noise)."""
+    best = None
+    for _ in range(repeats):
+        eng = Engine(cfg, params, ecfg)
+        for p, b in workload:
+            eng.submit(p, max_new_tokens=b)
+        t0 = time.perf_counter()
+        fin = eng.drain()
+        wall = time.perf_counter() - t0
+        m = eng.metrics()
+        m["wall_s"] = wall
+        m["tokens_per_s"] = m["total_tokens"] / wall
+        if best is None or m["tokens_per_s"] > best[1]["tokens_per_s"]:
+            best = (fin, m)
+    return best
 
 
 def main():
@@ -71,7 +99,9 @@ def main():
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N runs per engine config")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
@@ -81,7 +111,7 @@ def main():
     params = model.init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(7)
     workload = make_workload(rng, args.requests, cfg.vocab)
-    n_long = sum(1 for _, b in workload if b > 8)
+    n_long = sum(1 for _, b in workload if b > 16)
     print(f"workload: {len(workload)} requests ({n_long} long-tail), "
           f"{args.slots} slots")
 
@@ -90,19 +120,30 @@ def main():
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
                         prefill_bucket=16)
 
-    # warm both jit caches on a throwaway pass so wall times compare steady
-    # state, not compilation
-    warm = workload[: args.slots]
-    run_wave(cfg, params, warm, scfg)
-    run_engine(cfg, params, warm, ecfg)
-    run_engine(cfg, params, warm,
-               EngineConfig(**{**ecfg.__dict__, "kv_mode": "int8"}))
+    ecfg8 = EngineConfig(**{**ecfg.__dict__, "kv_mode": "int8"})
+    ecfg8f = EngineConfig(**{**ecfg8.__dict__, "fused_attn": True})
 
-    wave_out, wave = run_wave(cfg, params, workload, scfg)
-    eng_out, eng = run_engine(cfg, params, workload, ecfg)
-    eng8_out, eng8 = run_engine(
-        cfg, params, workload,
-        EngineConfig(**{**ecfg.__dict__, "kv_mode": "int8"}))
+    # warm the (process-shared) jit caches on a throwaway pass so wall
+    # times compare steady state, not compilation. One representative per
+    # PREFILL BUCKET shape (the engine's own bucketing): a warmup that
+    # misses a bucket leaves an XLA compile inside somebody's measured
+    # wall time.
+    from repro.engine.engine import bucket_len
+    reps = {}
+    for p, b in workload:
+        reps.setdefault(bucket_len(len(p), ecfg.prefill_bucket,
+                                   args.max_len), (p, 8))
+    warm = list(reps.values())
+    srv = Server(cfg, params, scfg)
+    run_wave(srv, warm)
+    for w in (ecfg, ecfg8, ecfg8f):
+        run_engine(cfg, params, warm, w)
+
+    wave_out, wave = run_wave(srv, workload, args.repeats)
+    eng_out, eng = run_engine(cfg, params, workload, ecfg, args.repeats)
+    eng8_out, eng8 = run_engine(cfg, params, workload, ecfg8, args.repeats)
+    eng8f_out, eng8f = run_engine(cfg, params, workload, ecfg8f,
+                                  args.repeats)
 
     # greedy-token agreement checks
     def agreement(a, b):
@@ -112,29 +153,47 @@ def main():
 
     agree_engine_wave = agreement(eng_out, wave_out)
     agree_int8_fp = agreement(eng8_out, eng_out)
+    agree_fused = agreement(eng8f_out, eng8_out)
 
     result = {
         "arch": cfg.name,
         "requests": len(workload),
         "slots": args.slots,
+        "max_len": args.max_len,
         "wave": wave,
         "engine": {k: v for k, v in eng.items()},
         "engine_int8_kv": {k: v for k, v in eng8.items()},
+        "engine_int8_kv_fused": {k: v for k, v in eng8f.items()},
         "speedup_tokens_per_s": eng["tokens_per_s"] / wave["tokens_per_s"],
+        "speedup_fused_vs_materialized_int8":
+            eng8f["tokens_per_s"] / eng8["tokens_per_s"],
         "greedy_agreement_engine_vs_wave": agree_engine_wave,
         "greedy_agreement_int8kv_vs_fp": agree_int8_fp,
+        "greedy_agreement_fused_vs_materialized": agree_fused,
     }
+
+    def steps(m):
+        if m.get("decode_step_p50_s") is None:
+            return ""
+        return (f", step p50 {m['decode_step_p50_s']*1e3:.2f} ms "
+                f"p95 {m['decode_step_p95_s']*1e3:.2f} ms")
+
     print(f"wave    : {wave['tokens_per_s']:8.1f} tok/s "
           f"({wave['total_tokens']} tokens, {wave['wall_s']:.2f}s)")
     print(f"engine  : {eng['tokens_per_s']:8.1f} tok/s "
           f"({eng['total_tokens']} tokens, {eng['wall_s']:.2f}s, "
-          f"util {eng['slot_utilization']:.0%})")
+          f"util {eng['slot_utilization']:.0%}{steps(eng)})")
     print(f"engine8 : {eng8['tokens_per_s']:8.1f} tok/s "
-          f"(INT8 KV, {eng8['kv_bytes_per_token']:.0f} B/token/layer vs "
-          f"{eng['kv_bytes_per_token']:.0f})")
-    print(f"speedup : {result['speedup_tokens_per_s']:.2f}x   "
-          f"greedy agreement engine=wave {agree_engine_wave:.1%}, "
-          f"int8=fp {agree_int8_fp:.1%}")
+          f"(INT8 KV materialized, {eng8['kv_bytes_per_token']:.0f} "
+          f"B/token/layer vs {eng['kv_bytes_per_token']:.0f}{steps(eng8)})")
+    print(f"engine8f: {eng8f['tokens_per_s']:8.1f} tok/s "
+          f"(INT8 KV fused read{steps(eng8f)})")
+    print(f"speedup : engine/wave {result['speedup_tokens_per_s']:.2f}x, "
+          f"fused/materialized "
+          f"{result['speedup_fused_vs_materialized_int8']:.2f}x")
+    print(f"greedy agreement: engine=wave {agree_engine_wave:.1%}, "
+          f"int8=fp {agree_int8_fp:.1%}, fused=materialized "
+          f"{agree_fused:.1%}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, default=str)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"])
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="read decode attention straight off the slot "
+                         "cache (dequant-in-kernel, no full-precision "
+                         "cache copy)")
     ap.add_argument("--recipe", default=None,
                     help="serve from a calibration recipe dir (see "
                          "`python -m repro.launch.serve --save-recipe`): "
@@ -40,7 +44,8 @@ def main():
     params = model.init(key, cfg)
     ecfg = EngineConfig(max_len=128, n_slots=4,
                         max_new_tokens=args.new_tokens,
-                        kv_mode=args.kv_mode)
+                        kv_mode=args.kv_mode,
+                        fused_attn=args.fused_attn)
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10))
                for _ in range(args.requests)]

@@ -19,6 +19,7 @@ one slot instead of stalling a whole wave.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional
 
@@ -34,6 +35,62 @@ from .scheduler import EngineRequest, Scheduler
 ENGINE_FAMILIES = ("dense", "moe", "vlm")
 
 
+def bucket_len(n: int, bucket: int, max_len: int) -> int:
+    """Round a prompt length up to its prefill bucket (bounded jit
+    recompiles). Single definition — the serve benchmark warms exactly
+    these shapes, so it must agree with the engine byte-for-byte."""
+    return min(max_len, -(-n // bucket) * bucket)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_prefill(cfg):
+    """Prefill depends only on the arch — shared across fused/sampling
+    variants so an engine flag flip never recompiles prefill buckets."""
+    model = get_model(cfg)
+    return jax.jit(lambda p, toks: model.prefill(p, cfg, {"tokens": toks}))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_entry_points(cfg, fused: bool, greedy: bool):
+    """Process-wide jitted (decode, prefill) per (arch config, fused flag,
+    sampling mode).
+
+    Jitting per Engine INSTANCE (the old scheme) meant every restart — and
+    every benchmark repetition — recompiled the decode step and each
+    prefill bucket from scratch; sharing the wrappers here makes engine
+    spin-up O(cache lookup) after the first instance and lets benchmarks
+    measure steady state instead of XLA compile time.
+
+    The cache argument is DONATED: the serving loop always replaces its
+    cache with the returned one, and donation lets XLA update the slot
+    arrays in place instead of copying every (L, N, T, ...) leaf each
+    decode step — an O(cache-size) saving per token for both the fused
+    and the materializing read path.
+
+    ``greedy`` folds argmax sampling into the decode executable: one
+    dispatch and a (N,)-int host transfer per step instead of a separate
+    argmax jit call plus the full logits pull."""
+    from repro.models import transformer
+
+    def step(p, c, t, pos):
+        logits, cache = transformer.decode_step_slots(p, cfg, c, t, pos,
+                                                      fused=fused)
+        if greedy:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), \
+                cache
+        return logits, cache
+
+    decode = jax.jit(step, donate_argnums=(1,))
+    return decode, _jitted_prefill(cfg)
+
+
+# slot/length stay traced: one compile per prefill bucket shape, shared by
+# every engine in the process; the old cache is dead after each call, so
+# its buffers are donated (in-place row writes)
+_WRITE = jax.jit(write_prefill, donate_argnums=(0,))
+_CLEAR = jax.jit(clear_slot, donate_argnums=(0,))
+
+
 @dataclasses.dataclass
 class EngineConfig:
     n_slots: int = 8
@@ -45,6 +102,9 @@ class EngineConfig:
     kv_qchunks: int = 4                 # ranges per head-vector in int8 mode
     kv_dtype: str = "float32"           # fp-mode storage; "bfloat16" on TPU
     prefill_bucket: int = 16            # prompt lengths round up to a multiple
+    fused_attn: bool = False            # decode reads via the fused dequant-
+                                        # in-kernel attention (no full-
+                                        # precision cache copy)
 
 
 class Engine:
@@ -82,14 +142,11 @@ class Engine:
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
             dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks,
             kv_scales=kv_scales)
-        from repro.models import transformer
-        self._decode = jax.jit(lambda p, c, t, pos:
-                               transformer.decode_step_slots(p, cfg, c, t, pos))
-        self._prefill = jax.jit(lambda p, toks:
-                                self.model.prefill(p, cfg, {"tokens": toks}))
-        # slot and length stay traced: one compile per prefill bucket shape
-        self._write = jax.jit(write_prefill)
-        self._clear = jax.jit(clear_slot)
+        self._greedy = ecfg.temperature <= 0
+        self._decode, self._prefill = _jitted_entry_points(
+            cfg, ecfg.fused_attn, self._greedy)
+        self._write = _WRITE
+        self._clear = _CLEAR
         # host-side slot state
         N = ecfg.n_slots
         self._last_tok = np.zeros(N, np.int32)
@@ -97,7 +154,21 @@ class Engine:
         self._uid = 0
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.decode_step_s: list[float] = []
         self._t_start: Optional[float] = None
+
+    def load_kv_scales(self, kv_scales: dict) -> None:
+        """Hot-swap a freshly loaded calibration recipe's static KV scales
+        into a DYNAMIC int8 cache without draining slots (ROADMAP item):
+        in-flight codes are requantized under the new constants once, and
+        every subsequent write skips both the min/max reduce and the
+        per-entry scale scatter. No-op for requests already finished; new
+        admissions quantize with the recipe constants from the start."""
+        from .kvcache import hotswap_static_scales
+        self.cache = jax.jit(hotswap_static_scales)(self.cache, {
+            k: jnp.asarray(v, jnp.float32) for k, v in kv_scales.items()})
+        # self._decode retraces automatically: the cache's static flag is
+        # pytree metadata, so the jit cache keys on it
 
     # ------------------------------------------------------------ intake --
     def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
@@ -128,8 +199,7 @@ class Engine:
 
     # ----------------------------------------------------------- serving --
     def _bucket(self, n: int) -> int:
-        b = self.ecfg.prefill_bucket
-        return min(self.ecfg.max_len, -(-n // b) * b)
+        return bucket_len(n, self.ecfg.prefill_bucket, self.ecfg.max_len)
 
     def _retire(self, slot: int):
         """Free the slot everywhere: scheduler, cache row (kv_pos → -1),
@@ -180,10 +250,19 @@ class Engine:
             # t=0 entry, and the next admit rewrites the row wholesale
             tokens = jnp.asarray(self._last_tok[:, None])
             pos = jnp.asarray(self._pos)
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              tokens, pos)
+            t0 = self.clock()
+            if self._greedy:
+                toks, self.cache = self._decode(self.params, self.cache,
+                                                tokens, pos)
+                toks = np.asarray(toks)
+            else:
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  tokens, pos)
+                toks = np.asarray(self._sample(logits[:, -1]))
             self.n_decode_steps += 1
-            toks = np.asarray(self._sample(logits[:, -1]))
+            # toks is on host here, so this brackets the real per-step
+            # decode latency (dispatch + device compute + sample)
+            self.decode_step_s.append(self.clock() - t0)
             for slot in active:
                 req = self.sched.slots[slot]
                 t = int(toks[slot])
@@ -213,6 +292,7 @@ class Engine:
         tps = [r.tokens_per_s for r in fin if r.tokens_per_s is not None]
         total_tokens = sum(len(r.out) for r in fin)
         wall = (self.clock() - self._t_start) if self._t_start else 0.0
+        steps = np.asarray(self.decode_step_s, np.float64)
         return {
             "n_finished": len(fin),
             "total_tokens": total_tokens,
@@ -225,6 +305,13 @@ class Engine:
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
             "ttft_p50_s": float(np.median(ttfts)) if ttfts else None,
             "request_tokens_per_s_mean": float(np.mean(tps)) if tps else None,
+            "decode_step_p50_s": (float(np.percentile(steps, 50))
+                                  if steps.size else None),
+            "decode_step_p95_s": (float(np.percentile(steps, 95))
+                                  if steps.size else None),
+            "decode_step_mean_s": (float(steps.mean())
+                                   if steps.size else None),
+            "fused_attn": self.ecfg.fused_attn,
             "kv_mode": self.cache.mode,
             "kv_static_scales": self.cache.static,
             "kv_bytes_per_token": self.cache.bytes_per_token(),

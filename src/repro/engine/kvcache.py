@@ -17,7 +17,12 @@ channels from inflating everyone else's quantization step; unlike the
 weight path (k-means cid per element, offline) the serving write sits on
 the decode critical path, so chunk membership is fixed (contiguous
 sub-channels) rather than value-clustered — no cid tensor, and dequant is
-a reshape + broadcast. Codes are dequantized on read inside attention.
+a reshape + broadcast. On read, the fused decode-attention kernel
+(`repro.kernels.decode_attention`, via `fused_slot_attention`) streams
+the codes + scales and dequantizes per chunk in VMEM next to the dot
+product — no full-precision copy of the cache is materialized; the
+legacy materialize-then-attend path (`slot_layer_update`) remains as the
+cross-checked reference.
 
 Storage cost per element: 1 byte of codes + 8·qchunks/D bytes of fp32
 (scale, zero) — for D=64, qchunks=4 that is 1.5 B/elt vs 2 B (bf16) or
@@ -112,16 +117,7 @@ def init_slot_cache(cfg, n_slots: int, max_len: int, *, mode: str = "fp",
     kv = dict(k=jnp.zeros(shape, kv_dtype), v=jnp.zeros(shape, kv_dtype),
               kv_pos=jnp.full((L, n_slots, max_len), -1, jnp.int32))
     if kv_scales is not None:
-        expect = (L, Hkv, qchunks)
-        got = {}
-        for kk in ("k_scale", "k_zero", "v_scale", "v_zero"):
-            arr = jnp.asarray(kv_scales[kk], jnp.float32)
-            if tuple(arr.shape) != expect:
-                raise ValueError(
-                    f"static kv_scales[{kk!r}] has shape {tuple(arr.shape)}"
-                    f", expected (L, Hkv, qchunks) = {expect} — was the "
-                    f"recipe calibrated with a different qchunks or arch?")
-            got[kk] = arr.reshape(L, 1, 1, Hkv, qchunks)
+        got = check_static_scales(kv_scales, L, Hkv, qchunks)
         return SlotKVCache(**kv, **got, mode=mode, qchunks=qchunks,
                            static=True)
     sshape = (L, n_slots, max_len, Hkv, C)
@@ -135,6 +131,23 @@ def init_slot_cache(cfg, n_slots: int, max_len: int, *, mode: str = "fp",
         k_scale=one(sshape), k_zero=zero(sshape),
         v_scale=one(sshape), v_zero=zero(sshape),
         mode=mode, qchunks=qchunks)
+
+
+def check_static_scales(kv_scales: dict, L: int, Hkv: int,
+                        qchunks: int) -> dict:
+    """Validate recipe kv_scales ((L, Hkv, C) each) and reshape to the
+    per-layer-constant cache layout (L, 1, 1, Hkv, C)."""
+    expect = (L, Hkv, qchunks)
+    got = {}
+    for kk in ("k_scale", "k_zero", "v_scale", "v_zero"):
+        arr = jnp.asarray(kv_scales[kk], jnp.float32)
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"static kv_scales[{kk!r}] has shape {tuple(arr.shape)}"
+                f", expected (L, Hkv, qchunks) = {expect} — was the "
+                f"recipe calibrated with a different qchunks or arch?")
+        got[kk] = arr.reshape(L, 1, 1, Hkv, qchunks)
+    return got
 
 
 # ----------------------------------------------------------- quant core ---
@@ -185,16 +198,15 @@ def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
 
 
 # ----------------------------------------------- per-layer decode update ---
-def slot_layer_update(cl: SlotKVCache, k_new, v_new, positions):
-    """One decode-step cache update for ONE layer (called from
-    `attention_block` inside the layer scan).
+def slot_layer_write(cl: SlotKVCache, k_new, v_new, positions
+                     ) -> SlotKVCache:
+    """One decode-step cache WRITE for ONE layer: quantize-in (int8 modes)
+    and scatter the new token — nothing is read back or dequantized.
 
     cl: per-layer slice — leaves (N, T, Hkv, D) / (N, T, Hkv, C) / (N, T).
     k_new/v_new: (N, 1, Hkv, D) post-RoPE. positions: (N, 1) int32 absolute
     per-slot positions (the time-index written is positions % T, though the
     engine never wraps — it retires at max_len).
-    Returns (k_full, v_full, kv_pos, new_cl) with k_full/v_full (N, T, Hkv,
-    D) in compute precision and kv_pos (N, T).
     """
     T = cl.k.shape[-3]
     slot_t = (positions[:, 0] % T).astype(jnp.int32)       # (N,)
@@ -203,46 +215,97 @@ def slot_layer_update(cl: SlotKVCache, k_new, v_new, positions):
         return jax.lax.dynamic_update_slice(
             buf, new.astype(buf.dtype), (t,) + (0,) * (buf.ndim - 1))
 
+    pos_upd = dict(kv_pos=jax.vmap(upd)(cl.kv_pos,
+                                        positions.astype(jnp.int32), slot_t))
     if cl.mode == "int8" and cl.static:
         # static scales: quantize with the calibrated per-layer constants —
         # no min/max reduce, and the scale arrays are never written
         qk = quantize_kv_static(k_new, cl.k_scale, cl.k_zero)
         qv = quantize_kv_static(v_new, cl.v_scale, cl.v_zero)
-        new_cl = dataclasses.replace(
-            cl,
-            k=jax.vmap(upd)(cl.k, qk, slot_t),
-            v=jax.vmap(upd)(cl.v, qv, slot_t),
-            kv_pos=jax.vmap(upd)(cl.kv_pos, positions.astype(jnp.int32),
-                                 slot_t))
-        k_full = dequantize_kv(new_cl.k, cl.k_scale, cl.k_zero, k_new.dtype)
-        v_full = dequantize_kv(new_cl.v, cl.v_scale, cl.v_zero, v_new.dtype)
-    elif cl.mode == "int8":
+        return dataclasses.replace(
+            cl, k=jax.vmap(upd)(cl.k, qk, slot_t),
+            v=jax.vmap(upd)(cl.v, qv, slot_t), **pos_upd)
+    if cl.mode == "int8":
         qk, ks, kz = quantize_kv(k_new, cl.qchunks)        # (N,1,H,D)/(N,1,H,C)
         qv, vs, vz = quantize_kv(v_new, cl.qchunks)
-        new_cl = dataclasses.replace(
+        return dataclasses.replace(
             cl,
             k=jax.vmap(upd)(cl.k, qk, slot_t),
             v=jax.vmap(upd)(cl.v, qv, slot_t),
             k_scale=jax.vmap(upd)(cl.k_scale, ks, slot_t),
             k_zero=jax.vmap(upd)(cl.k_zero, kz, slot_t),
             v_scale=jax.vmap(upd)(cl.v_scale, vs, slot_t),
-            v_zero=jax.vmap(upd)(cl.v_zero, vz, slot_t),
-            kv_pos=jax.vmap(upd)(cl.kv_pos, positions.astype(jnp.int32),
-                                 slot_t))
-        k_full = dequantize_kv(new_cl.k, new_cl.k_scale, new_cl.k_zero,
-                               k_new.dtype)
-        v_full = dequantize_kv(new_cl.v, new_cl.v_scale, new_cl.v_zero,
-                               v_new.dtype)
-    else:
-        new_cl = dataclasses.replace(
-            cl,
-            k=jax.vmap(upd)(cl.k, k_new, slot_t),
-            v=jax.vmap(upd)(cl.v, v_new, slot_t),
-            kv_pos=jax.vmap(upd)(cl.kv_pos, positions.astype(jnp.int32),
-                                 slot_t))
-        k_full = new_cl.k.astype(k_new.dtype)
-        v_full = new_cl.v.astype(v_new.dtype)
+            v_zero=jax.vmap(upd)(cl.v_zero, vz, slot_t), **pos_upd)
+    return dataclasses.replace(
+        cl, k=jax.vmap(upd)(cl.k, k_new, slot_t),
+        v=jax.vmap(upd)(cl.v, v_new, slot_t), **pos_upd)
+
+
+def materialize_layer(cl: SlotKVCache, dtype=jnp.float32):
+    """Full-precision (k, v) view of one layer's slot cache — the LEGACY
+    read path (and the oracle the fused kernel is tested against). Costs a
+    full dequant pass + a (N, T, Hkv, D) fp copy per call."""
+    if cl.mode == "int8":
+        return (dequantize_kv(cl.k, cl.k_scale, cl.k_zero, dtype),
+                dequantize_kv(cl.v, cl.v_scale, cl.v_zero, dtype))
+    return cl.k.astype(dtype), cl.v.astype(dtype)
+
+
+def slot_layer_update(cl: SlotKVCache, k_new, v_new, positions):
+    """Legacy combined write + materialize: returns (k_full, v_full,
+    kv_pos, new_cl) with k_full/v_full (N, T, Hkv, D) in compute precision.
+    The fused decode path (`fused_slot_attention`) replaces this read —
+    use `slot_layer_write` there so no full-precision copy ever exists."""
+    new_cl = slot_layer_write(cl, k_new, v_new, positions)
+    k_full, v_full = materialize_layer(new_cl, k_new.dtype)
     return k_full, v_full, new_cl.kv_pos, new_cl
+
+
+def fused_slot_attention(cl: SlotKVCache, q, q_pos, *, use_pallas=None,
+                         interpret: bool = False, kv_chunk=None):
+    """Decode attention for one layer straight off the (possibly INT8)
+    slot cache — dequant-in-kernel, no full-cache materialization.
+
+    cl: per-layer slice AFTER `slot_layer_write`; q (N, Hq, D) post-RoPE;
+    q_pos (N,) int32 current positions. Returns (N, Hq, D).
+    """
+    from repro.kernels.decode_attention import decode_attention
+    if cl.mode == "int8":
+        return decode_attention(
+            q, cl.k, cl.v, cl.kv_pos, q_pos,
+            k_scale=cl.k_scale, k_zero=cl.k_zero,
+            v_scale=cl.v_scale, v_zero=cl.v_zero, mode="int8",
+            per_entry_scales=not cl.static, kv_chunk=kv_chunk,
+            use_pallas=use_pallas, interpret=interpret)
+    return decode_attention(q, cl.k, cl.v, cl.kv_pos, q_pos, mode="fp",
+                            kv_chunk=kv_chunk, use_pallas=use_pallas,
+                            interpret=interpret)
+
+
+def hotswap_static_scales(cache: SlotKVCache, kv_scales: dict
+                          ) -> SlotKVCache:
+    """Switch a DYNAMIC int8 cache to static recipe scales mid-flight —
+    no slot drain (ROADMAP item). Existing codes are requantized under the
+    new constants (dequant with their per-entry scales, requantize with
+    the per-layer constants — a one-time migration pass; invalid entries
+    carry garbage but stay masked by kv_pos). From then on the `static`
+    flag routes writes through `quantize_kv_static`: the per-step min/max
+    reduce and the scale-array scatter both disappear, and the (L, N, T,
+    Hkv, C) per-entry scale arrays are dropped for (L, 1, 1, Hkv, C)
+    constants."""
+    if cache.mode != "int8":
+        raise ValueError("hot-swap requires an int8 cache")
+    if cache.static:
+        raise ValueError("cache already serves static scales")
+    L, Hkv = cache.k.shape[0], cache.k.shape[-2]
+    got = check_static_scales(kv_scales, L, Hkv, cache.qchunks)
+    k = quantize_kv_static(
+        dequantize_kv(cache.k, cache.k_scale, cache.k_zero),
+        got["k_scale"], got["k_zero"])
+    v = quantize_kv_static(
+        dequantize_kv(cache.v, cache.v_scale, cache.v_zero),
+        got["v_scale"], got["v_zero"])
+    return dataclasses.replace(cache, k=k, v=v, static=True, **got)
 
 
 # ------------------------------------------------------ slot management ---

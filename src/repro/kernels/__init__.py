@@ -4,6 +4,7 @@ from . import act_quant, ops, packing, ref
 from .act_quant import (act_split_quantize, act_split_quantize_ref,
                         act_split_quantize_static,
                         act_split_quantize_static_ref)
+from .decode_attention import decode_attention
 from .ops import linear, quantized_matmul, pack_for_kernel, dequant_constants
 from .splitquant_matmul import splitquant_matmul
 
@@ -11,4 +12,4 @@ __all__ = ["ops", "ref", "packing", "act_quant", "linear",
            "quantized_matmul", "pack_for_kernel", "dequant_constants",
            "splitquant_matmul", "act_split_quantize",
            "act_split_quantize_ref", "act_split_quantize_static",
-           "act_split_quantize_static_ref"]
+           "act_split_quantize_static_ref", "decode_attention"]

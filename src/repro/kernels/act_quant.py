@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -75,9 +76,9 @@ def act_split_quantize(x: jnp.ndarray, *, bits: int = 8, n_chunks: int = 3,
 
 
 def _static_kernel(x_ref, scale_ref, zero_ref, q_ref, *, bits: int):
-    x = x_ref[...].astype(jnp.float32)                 # (br, cw)
-    scale = scale_ref[0, 0]
-    zero = zero_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)                 # (br, N)
+    scale = scale_ref[...]                             # (1, N) per-column
+    zero = zero_ref[...]
     qmin = -(2 ** (bits - 1))
     qmax = 2 ** (bits - 1) - 1
     # offline zero-points are exact (fractional) and folded into the
@@ -98,48 +99,37 @@ def act_split_quantize_static(x: jnp.ndarray, scale: jnp.ndarray,
     the runtime min/max from the serving hot path. Use the dynamic
     `act_split_quantize` as the fallback when no recipe is loaded.
 
-    Indivisible widths use the same uneven `array_split` chunking the
-    calibration stats were collected with (one pallas_call per chunk
-    width; equal widths fuse into a single 2-D grid).
+    ONE pallas_call for every chunking, even or uneven: the static
+    `array_split` chunk bounds become a per-column chunk-id map, the
+    (n_chunks,) scales gather through it into per-column (1, N) rows (an
+    N-element host-free gather, fused into the jit), and the kernel is a
+    pure row-block broadcast multiply. Previously indivisible widths
+    launched one pallas_call per chunk — n_chunks kernel launches per
+    layer call, now 1. Each program owns a full-width (block_r, N) tile;
+    at serving widths (N ≤ 8k) that is ≪ VMEM, shrink block_r if N grows.
     """
     from repro.core.splitquant import activation_chunk_bounds
 
     R, N = x.shape
     n_chunks = scale.shape[-1]
     assert R % block_r == 0, (x.shape, block_r)
-    kernel = functools.partial(_static_kernel, bits=bits)
-    scale = scale.reshape(1, n_chunks).astype(jnp.float32)
-    zero = zero.reshape(1, n_chunks).astype(jnp.float32)
-    if N % n_chunks == 0:
-        cw = N // n_chunks
-        return pl.pallas_call(
-            kernel,
-            grid=(R // block_r, n_chunks),
-            in_specs=[
-                pl.BlockSpec((block_r, cw), lambda i, j: (i, j)),
-                pl.BlockSpec((1, 1), lambda i, j: (0, j)),
-                pl.BlockSpec((1, 1), lambda i, j: (0, j)),
-            ],
-            out_specs=pl.BlockSpec((block_r, cw), lambda i, j: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((R, N), jnp.int8),
-            interpret=interpret,
-        )(x, scale, zero)
     bounds = activation_chunk_bounds(N, n_chunks)
-    outs = []
-    for c, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
-        outs.append(pl.pallas_call(
-            kernel,
-            grid=(R // block_r, 1),
-            in_specs=[
-                pl.BlockSpec((block_r, hi - lo), lambda i, j: (i, 0)),
-                pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-                pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_r, hi - lo), lambda i, j: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((R, hi - lo), jnp.int8),
-            interpret=interpret,
-        )(x[:, lo:hi], scale[:, c:c + 1], zero[:, c:c + 1]))
-    return jnp.concatenate(outs, axis=1)
+    cid = jnp.asarray(np.repeat(np.arange(n_chunks),
+                                np.diff(bounds)), jnp.int32)   # (N,)
+    scale_row = jnp.take(scale.astype(jnp.float32).reshape(-1), cid)[None]
+    zero_row = jnp.take(zero.astype(jnp.float32).reshape(-1), cid)[None]
+    return pl.pallas_call(
+        functools.partial(_static_kernel, bits=bits),
+        grid=(R // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, N), lambda i: (i, 0)),
+            pl.BlockSpec((1, N), lambda i: (0, 0)),
+            pl.BlockSpec((1, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, N), jnp.int8),
+        interpret=interpret,
+    )(x, scale_row, zero_row)
 
 
 def act_split_quantize_static_ref(x: jnp.ndarray, scale: jnp.ndarray,

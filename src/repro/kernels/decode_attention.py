@@ -1,0 +1,284 @@
+"""Pallas TPU kernel: fused decode attention over the quantized slot cache.
+
+One decode step reads the whole per-layer slot cache — this is THE
+bandwidth-bound op of serving (DESIGN.md §6). Before this kernel the int8
+cache was dequantized into a full-precision (N, T, Hkv, D) copy every step
+and handed to dense `attend`, so HBM traffic was fp32-serving traffic PLUS
+the dequant pass. Here the INT8 codes and per-chunk (scale, zero) stream
+HBM→VMEM once, dequantize per sub-channel chunk in VMEM right next to the
+dot product (SplitQuant §4.2 ranges finally pay for themselves at ~1.5
+B/elt moved), and a flash-style online softmax accumulates across KV
+chunks — no full-precision copy of the cache ever exists.
+
+Shapes (one layer, decode S=1 per slot):
+  q       (N, Hq, D)    post-RoPE queries, one token per slot
+  k, v    (N, T, Hkv, D) int8 codes (mode="int8") or float (mode="fp")
+  kv_pos  (N, T) int32  absolute position per time index, -1 = empty
+  q_pos   (N,)   int32  per-slot current absolute position
+  scales  per-entry (N, T, Hkv, C) fp32, or per-layer static (1, 1, Hkv, C)
+
+Grid: (N slots, T / Tc chunks) — chunk index fastest, so the (m, l, acc)
+online-softmax state for one slot lives in VMEM scratch across its chunk
+sweep and the output block is written once at the final chunk. Blocks per
+program: q (1, Hq, D), K/V (1, Tc, Hkv, D), scales (1, Tc, Hkv, C) dynamic
+/ (1, 1, Hkv, C) static, kv_pos (1, Tc); q_pos rides in SMEM. GQA (Hq =
+G·Hkv) is accumulated in the grouped (Hkv, G, ·) layout — K/V are never
+broadcast to Hq. Chunks whose kv_pos entries are all -1 (dead slots,
+unwritten tail) are skipped under `pl.when`: past the validity mask they
+cost no flops, so a 512-deep cache with 100-deep occupants does ~1/4 of
+the work. Fully-empty slots return exact 0 (the materialized reference
+returns a meaningless mean-V row there; the engine discards both).
+
+VMEM per program (Tc=128, Hkv=8, D=128, C=4): K+V codes 2·128·8·128 =
+256 KiB int8, scales 2·2·128·8·4·4 = 64 KiB, q/acc 2·Hq·D·4 ≪ 1 MiB —
+well under budget; Tc is the knob if D grows.
+
+The same math ships as a pure-jnp chunked path (`use_pallas=False`, the
+CPU lowering — `jax.lax.cond` gives it the same dead-chunk skip) and the
+kernel itself runs under `interpret=True` as the reference fallback in
+tests. Numerics match the materialize-then-`attend` path to reduction
+order (same masked softmax: invalid entries get exactly-zero weight).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant_chunk(codes, scale, zero):
+    """codes (..., H, D) int, scale/zero (..., H, C) → fp32 (..., H, D).
+    Per-sub-channel-chunk affine dequant, entirely in registers/VMEM."""
+    *lead, H, D = codes.shape
+    C = scale.shape[-1]
+    qc = codes.astype(jnp.float32).reshape(*lead, H, C, D // C)
+    x = (qc - zero[..., None]) / scale[..., None]
+    return x.reshape(*lead, H, D)
+
+
+def _pick_kv_chunk(T: int, kv_chunk) -> int:
+    """Largest divisor of T that is ≤ the requested chunk (default 128).
+
+    T with no usable divisor (prime / awkward max_len) falls back to ONE
+    chunk of T rather than a degenerate Tc=1 sweep — a T-iteration grid
+    would be orders of magnitude slower than the materialized path."""
+    want = min(T, 128 if kv_chunk is None else kv_chunk)
+    for c in range(want, 0, -1):
+        if T % c == 0:
+            return c if c >= max(2, want // 8) else T
+    return T
+
+
+# ------------------------------------------------------------- kernel ---
+def _fused_kernel(qpos_ref, q_ref, kpos_ref, k_ref, v_ref, *rest,
+                  mode: str, n_chunks: int, groups: int, per_entry: bool):
+    if mode == "int8":
+        ks_ref, kz_ref, vs_ref, vz_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    j = pl.program_id(1)
+    Hq, D = q_ref.shape[1], q_ref.shape[2]
+    Hkv = k_ref.shape[2]
+    G = groups
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpos = kpos_ref[...]                                   # (1, Tc)
+    qpos = qpos_ref[0, 0]
+    valid = (kpos >= 0) & (kpos <= qpos)                   # (1, Tc), causal
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * (D ** -0.5)     # (Hq, D)
+        if mode == "int8":
+            # dynamic blocks are (1, Tc, Hkv, C); static (1, 1, Hkv, C)
+            # constants broadcast over the chunk's time axis
+            sel = (lambda r: r[0]) if per_entry else (lambda r: r[0, 0])
+            kc = _dequant_chunk(k_ref[0], sel(ks_ref), sel(kz_ref))
+            vc = _dequant_chunk(v_ref[0], sel(vs_ref), sel(vz_ref))
+        else:
+            kc = k_ref[0].astype(jnp.float32)              # (Tc, Hkv, D)
+            vc = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(Hkv, G, D)
+        # scores (Hkv, G, Tc): batch Hkv, contract D — K never expands to Hq
+        s = jax.lax.dot_general(qg, kc, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        s = s.reshape(Hq, kc.shape[0])
+        s = jnp.where(valid, s, NEG_INF)                   # (Hq, Tc)
+        m_prev = m_ref[:, 0]                               # (Hq,)
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # exactly-zero weight on invalid entries (matches the reference:
+        # exp(NEG_INF - m) underflows to 0 whenever any valid entry exists)
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pg = p.reshape(Hkv, G, kc.shape[0])
+        pv = jax.lax.dot_general(pg, vc, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv.reshape(Hq, D)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == n_chunks - 1)
+    def _flush():
+        l = l_ref[:, :1]                                   # (Hq, 1)
+        o = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def _decode_attention_pallas(q, k, v, kv_pos, q_pos, scales, *, mode,
+                             per_entry, kv_chunk, interpret):
+    N, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    Tc = _pick_kv_chunk(T, kv_chunk)
+    nc = T // Tc
+    kernel = functools.partial(_fused_kernel, mode=mode, n_chunks=nc,
+                               groups=Hq // Hkv, per_entry=per_entry)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda n, j: (n, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, Hq, D), lambda n, j: (n, 0, 0)),
+        pl.BlockSpec((1, Tc), lambda n, j: (n, j)),
+        pl.BlockSpec((1, Tc, Hkv, D), lambda n, j: (n, j, 0, 0)),
+        pl.BlockSpec((1, Tc, Hkv, D), lambda n, j: (n, j, 0, 0)),
+    ]
+    args = [q_pos.reshape(N, 1).astype(jnp.int32), q, kv_pos, k, v]
+    if mode == "int8":
+        C = scales[0].shape[-1]
+        if per_entry:
+            sspec = pl.BlockSpec((1, Tc, Hkv, C), lambda n, j: (n, j, 0, 0))
+        else:
+            sspec = pl.BlockSpec((1, 1, Hkv, C), lambda n, j: (0, 0, 0, 0))
+        in_specs += [sspec] * 4
+        args += list(scales)
+    return pl.pallas_call(
+        kernel,
+        grid=(N, nc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Hq, D), lambda n, j: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 128), jnp.float32),            # running max
+            pltpu.VMEM((Hq, 128), jnp.float32),            # running sum
+            pltpu.VMEM((Hq, D), jnp.float32),              # output acc
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+# ------------------------------------------------- jnp chunked lowering ---
+def _decode_attention_jnp(q, k, v, kv_pos, q_pos, scales, *, mode,
+                          per_entry, kv_chunk):
+    """Same online-softmax chunk sweep in pure jnp — the CPU path. Only a
+    (N, Tc, Hkv, D) chunk is ever dequantized (transient, register-sized);
+    `lax.cond` skips chunks with no valid entry, mirroring the kernel's
+    `pl.when` dead-chunk skip. Chunks are carved out lazily with
+    `dynamic_slice` INSIDE the cond branch — only the per-chunk kv_pos row
+    (N·Tc int32) is read unconditionally, so a skipped chunk's codes and
+    scales never move at all (a pre-chunked scan input would copy the
+    whole cache into transposed scan leaves every step)."""
+    N, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Tc = _pick_kv_chunk(T, kv_chunk)
+    nc = T // Tc
+    qs = (q.astype(jnp.float32) * (D ** -0.5)).reshape(N, Hkv, G, D)
+    qp = q_pos.astype(jnp.int32)[:, None]                  # (N, 1)
+
+    def step(carry, j):
+        m, l, acc = carry
+        t0 = j * Tc
+        pos_c = jax.lax.dynamic_slice_in_dim(kv_pos, t0, Tc, 1)  # (N, Tc)
+        valid = (pos_c >= 0) & (pos_c <= qp)               # (N, Tc)
+
+        def compute(carry):
+            m, l, acc = carry
+
+            def chunk(x):                                  # (N, T, ...) →
+                return jax.lax.dynamic_slice_in_dim(x, t0, Tc, 1)
+
+            if mode == "int8":
+                ks, kz = ((chunk(scales[0]), chunk(scales[1])) if per_entry
+                          else (scales[0], scales[1]))
+                vs, vz = ((chunk(scales[2]), chunk(scales[3])) if per_entry
+                          else (scales[2], scales[3]))
+                kc = _dequant_chunk(chunk(k), ks, kz)      # (N, Tc, Hkv, D)
+                vc = _dequant_chunk(chunk(v), vs, vz)
+            else:
+                kc = chunk(k).astype(jnp.float32)
+                vc = chunk(v).astype(jnp.float32)
+            s = jnp.einsum("nkgd,ntkd->nkgt", qs, kc,
+                           preferred_element_type=jnp.float32)
+            msk = valid[:, None, None, :]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "nkgt,ntkd->nkgd", p, vc,
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        carry = jax.lax.cond(jnp.any(valid), compute, lambda c: c, carry)
+        return carry, None
+
+    m0 = jnp.full((N, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((N, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((N, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(nc, dtype=jnp.int32))
+    o = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None],
+                  0.0)
+    return o.reshape(N, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------- entry point ---
+def decode_attention(q, k, v, kv_pos, q_pos, *, k_scale=None, k_zero=None,
+                     v_scale=None, v_zero=None, mode: str = "fp",
+                     per_entry_scales: bool = True, kv_chunk=None,
+                     use_pallas=None, interpret: bool = False):
+    """Fused decode attention over one layer's slot cache (see module doc).
+
+    mode="fp":   k/v are float; scale/zero args are ignored.
+    mode="int8": k/v are int8 codes; scales are per-entry
+                 (per_entry_scales=True, (N, T, Hkv, C)) or per-layer
+                 static constants ((1, 1, Hkv, C)).
+    use_pallas:  None = auto (Pallas on TPU, jnp chunk sweep elsewhere);
+                 True with interpret=True is the reference fallback.
+    Returns (N, Hq, D) in q.dtype.
+    """
+    if mode not in ("fp", "int8"):
+        raise ValueError(f"unknown mode {mode!r}")
+    N, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    scales = None
+    if mode == "int8":
+        scales = (k_scale, k_zero, v_scale, v_zero)
+        if any(s is None for s in scales):
+            raise ValueError("mode='int8' requires all four scale arrays")
+        if D % k_scale.shape[-1]:
+            raise ValueError(f"head_dim {D} not divisible by "
+                             f"qchunks {k_scale.shape[-1]}")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return _decode_attention_pallas(
+            q, k, v, kv_pos, q_pos, scales, mode=mode,
+            per_entry=per_entry_scales, kv_chunk=kv_chunk,
+            interpret=interpret)
+    return _decode_attention_jnp(
+        q, k, v, kv_pos, q_pos, scales, mode=mode,
+        per_entry=per_entry_scales, kv_chunk=kv_chunk)

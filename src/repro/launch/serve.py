@@ -118,6 +118,11 @@ def main():
     ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"],
                     help="engine KV cache storage (int8 = SplitQuant §4.2 "
                          "chunked-range quantization of K/V at rest)")
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="decode attention reads the slot cache through "
+                         "the fused dequant-in-kernel path (Pallas on "
+                         "TPU, chunked jnp elsewhere) — no full-precision "
+                         "cache copy per step")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     ap.add_argument("--recipe", default=None,
@@ -181,7 +186,7 @@ def main():
     eng = Engine(cfg, params, EngineConfig(
         n_slots=args.slots, max_len=256,
         max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
-        kv_qchunks=kv_qchunks),
+        kv_qchunks=kv_qchunks, fused_attn=args.fused_attn),
         kv_scales=kv_scales)
     for p in prompts:
         eng.submit(p)

@@ -195,7 +195,7 @@ def tshard_decode_attend(q, k, v, q_pos, kv_pos, *, window=None):
 def attention_block(p, x, cfg, positions, cache_layer=None, *,
                     causal=True, window=None, kv_chunk=None,
                     cross_kv=None, want_kv=False, tshard_decode=False,
-                    kv_pos_override=None):
+                    kv_pos_override=None, fused_attn=False):
     """Full attention sub-layer: projections + RoPE + (cache) + attend + out.
 
     p: {"wq","wk","wv","wo"(,biases)}; x: (B, S, d).
@@ -208,6 +208,9 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
     caller can assemble a prefill cache.
     kv_pos_override: (B, S) per-request KV validity positions for prefill
     with padding (-1 = pad token; masked out of attention).
+    fused_attn: slot-cache decode only — read attention straight off the
+    (possibly INT8) cache via the fused Pallas/jnp kernel instead of
+    materializing a full-precision copy for `attend`.
     Returns (out, new_cache_layer | (k, v) | None).
     """
     B, S, _ = x.shape
@@ -227,11 +230,20 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
         k, v, kv_pos = cross_kv
     elif _is_slot_cache(cache_layer):
         # engine slot cache: per-request positions (B, 1), quant-aware
-        from repro.engine.kvcache import slot_layer_update
-        k, v, kv_pos, new_cache = slot_layer_update(
-            cache_layer, k, v, positions)
-        o = attend(q, k, v, positions, kv_pos, causal=causal, window=window,
-                   kv_chunk=kv_chunk)
+        from repro.engine.kvcache import (fused_slot_attention,
+                                          slot_layer_update,
+                                          slot_layer_write)
+        if fused_attn and S == 1 and causal and window is None:
+            # fused decode read: write-only cache update, then dequant-in-
+            # kernel attention — no full-precision cache copy exists
+            new_cache = slot_layer_write(cache_layer, k, v, positions)
+            o = fused_slot_attention(new_cache, q[:, 0], positions[:, 0],
+                                     kv_chunk=kv_chunk)[:, None]
+        else:
+            k, v, kv_pos, new_cache = slot_layer_update(
+                cache_layer, k, v, positions)
+            o = attend(q, k, v, positions, kv_pos, causal=causal,
+                       window=window, kv_chunk=kv_chunk)
         out = dense(o.reshape(B, S, Hq * D), p["wo"], p.get("bo"))
         return shard_hint(out, "dp", None, None), new_cache
     elif cache_layer is not None:

@@ -68,14 +68,15 @@ def init(key, cfg):
 
 def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
                  kv_chunk, want_kv: bool, moe_blocks: int = 1,
-                 tshard_decode: bool = False, kv_pos_override=None):
+                 tshard_decode: bool = False, kv_pos_override=None,
+                 fused_attn: bool = False):
     x = shard_hint(x, "dp", None, None)
     h = apply_norm(x, p["ln1"], cfg.norm_type)
     attn_out, kv = attention_block(
         p["attn"], h, cfg, positions, cache_layer,
         causal=cfg.family != "encoder", window=cfg.window,
         kv_chunk=kv_chunk, want_kv=want_kv, tshard_decode=tshard_decode,
-        kv_pos_override=kv_pos_override)
+        kv_pos_override=kv_pos_override, fused_attn=fused_attn)
     x = x + attn_out
     h = apply_norm(x, p["ln2"], cfg.norm_type)
     if moe:
@@ -87,13 +88,14 @@ def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
 
 def _scan_stack(cfg, stacked, x, positions, cache, *, moe, kv_chunk,
                 want_kv, remat, moe_blocks=1, tshard_decode=False,
-                kv_pos_override=None):
+                kv_pos_override=None, fused_attn=False):
     """Scan a homogeneous stacked layer group. cache: per-stack KVCache,
     engine SlotKVCache, or None. Returns (x, new_cache_or_kv, aux_sum)."""
     fn = functools.partial(_layer_apply, cfg, moe=moe, kv_chunk=kv_chunk,
                            want_kv=want_kv, moe_blocks=moe_blocks,
                            tshard_decode=tshard_decode,
-                           kv_pos_override=kv_pos_override)
+                           kv_pos_override=kv_pos_override,
+                           fused_attn=fused_attn)
     if remat:
         fn = jax.checkpoint(fn, static_argnums=())
 
@@ -143,12 +145,14 @@ def embed_inputs(params, cfg, batch):
 def forward(params, cfg, batch, cache: Optional[KVCache] = None,
             positions=None, *, kv_chunk=None, want_cache=False, remat=False,
             cache_len: Optional[int] = None, moe_blocks: int = 1,
-            tshard_decode: bool = False, pad_mask=None):
+            tshard_decode: bool = False, pad_mask=None,
+            fused_attn: bool = False):
     """Returns (logits, new_cache, aux). cache ⇒ decode step (a KVCache, or
     an engine SlotKVCache with per-request positions); want_cache ⇒ prefill
     (assembles a fresh cache from the computed K/V). pad_mask (B, S) marks
     True=padding tokens whose K/V must never be attended to (left- or
-    right-padded batched prefill)."""
+    right-padded batched prefill). fused_attn routes slot-cache decode
+    through the fused dequant-in-kernel attention."""
     if cache is not None:
         x = embed_lookup(params["embed"], batch["tokens"])     # (B, 1)
     else:
@@ -178,7 +182,8 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               split_cache(cache, 0, n_dense), moe=False,
                               kv_chunk=kv_chunk, want_kv=want_kv, remat=remat,
                               tshard_decode=tshard_decode,
-                              kv_pos_override=kv_pos_override)
+                              kv_pos_override=kv_pos_override,
+                              fused_attn=fused_attn)
         aux += a
         (caches if cache is not None else kvs).append(c)
     if n_moe:
@@ -187,7 +192,8 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               moe=True, kv_chunk=kv_chunk, want_kv=want_kv,
                               remat=remat, moe_blocks=moe_blocks,
                               tshard_decode=tshard_decode,
-                              kv_pos_override=kv_pos_override)
+                              kv_pos_override=kv_pos_override,
+                              fused_attn=fused_attn)
         aux += a
         (caches if cache is not None else kvs).append(c)
 
@@ -283,13 +289,17 @@ def decode_step(params, cfg, cache: KVCache, tokens, pos, *, kv_chunk=None,
     return logits, cache
 
 
-def decode_step_slots(params, cfg, cache, tokens, pos, *, kv_chunk=None):
+def decode_step_slots(params, cfg, cache, tokens, pos, *, kv_chunk=None,
+                      fused=False):
     """One decode step over an engine slot cache. tokens: (N, 1) int32;
     pos: (N,) int32 per-slot absolute positions (one per request — slots
-    at different depths decode together)."""
+    at different depths decode together). ``fused``: attention reads the
+    (possibly INT8) cache through the fused dequant-in-kernel path instead
+    of materializing a full-precision copy."""
     positions = jnp.reshape(pos, (-1, 1)).astype(jnp.int32)
     logits, cache, _ = forward(params, cfg, {"tokens": tokens}, cache=cache,
-                               positions=positions, kv_chunk=kv_chunk)
+                               positions=positions, kv_chunk=kv_chunk,
+                               fused_attn=fused)
     return logits, cache
 
 

@@ -243,6 +243,34 @@ def test_static_act_kernel_matches_ref(bits, width):
     assert int(qk.max()) <= qmax and int(qk.min()) >= -(qmax + 1)
 
 
+def test_static_act_kernel_single_launch(monkeypatch):
+    """The chunk-id-map form issues exactly ONE pallas_call regardless of
+    chunking — uneven widths used to launch one kernel per chunk."""
+    from repro.kernels import act_quant
+
+    calls = []
+    orig = act_quant.pl.pallas_call
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(act_quant.pl, "pallas_call", counting)
+    for width in (96, 97):                          # even and uneven
+        x = jax.random.normal(KEY, (256, width))
+        scale = jnp.asarray([1.3, 0.7, 2.1])
+        zero = jnp.asarray([0.5, -1.25, 3.0])
+        calls.clear()
+        # __wrapped__ bypasses the jit cache so the trace (and therefore
+        # the pallas_call count) happens on every invocation
+        q = act_quant.act_split_quantize_static.__wrapped__(
+            x, scale, zero, bits=8, interpret=True)
+        ref = act_quant.act_split_quantize_static_ref(x, scale, zero,
+                                                      bits=8)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(ref))
+        assert len(calls) == 1, (width, len(calls))
+
+
 def test_static_act_kernel_consumes_recipe_scales(bert):
     """End-to-end: scales calibrated by collect_act_stats on BERT-Tiny
     (uneven 128/3 chunks) feed straight into the static kernel."""

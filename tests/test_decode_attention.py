@@ -1,0 +1,307 @@
+"""Fused decode-attention kernel vs the materialize-then-`attend` oracle:
+fp / int8-dynamic / int8-static caches, empty slots, ragged kv_pos, GQA
+(Hq > Hkv), both lowerings (Pallas interpret mode and the jnp chunk
+sweep), plus engine-level greedy equivalence and the mid-flight
+static-scale hot-swap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import Engine, EngineConfig
+from repro.engine.kvcache import (dequantize_kv, fused_slot_attention,
+                                  hotswap_static_scales, init_slot_cache,
+                                  materialize_layer, quantize_kv,
+                                  quantize_kv_static, slot_layer_update,
+                                  slot_layer_write)
+from repro.kernels.decode_attention import decode_attention
+from repro.models import get_model
+from repro.models.attention import attend
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_case(seed, N=3, T=48, Hq=8, Hkv=4, D=32, C=4, lens=None):
+    """Random K/V + ragged slot occupancy. lens[i] = valid prefix length
+    of slot i (0 = empty slot); q_pos is the last valid position."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(N, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(N, T, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(N, T, Hkv, D)).astype(np.float32))
+    if lens is None:
+        lens = [int(x) for x in rng.integers(0, T + 1, size=N)]
+    kv_pos = np.full((N, T), -1, np.int32)
+    for i, n in enumerate(lens):
+        kv_pos[i, :n] = np.arange(n)
+    q_pos = np.asarray([max(n - 1, 0) for n in lens], np.int32)
+    return q, k, v, jnp.asarray(kv_pos), jnp.asarray(q_pos), lens
+
+
+def reference(q, k, v, kv_pos, q_pos):
+    """The legacy read path: dense `attend` over a materialized cache."""
+    return attend(q[:, None], k, v, q_pos[:, None], kv_pos)[:, 0]
+
+
+def check(out, ref, lens, atol=2e-5):
+    """Occupied slots must match the oracle; empty slots are exact 0 in
+    the fused path (the oracle emits a meaningless mean-V row there)."""
+    out, ref = np.asarray(out), np.asarray(ref)
+    for i, n in enumerate(lens):
+        if n > 0:
+            np.testing.assert_allclose(out[i], ref[i], atol=atol,
+                                       err_msg=f"slot {i} len {n}")
+        else:
+            assert np.all(out[i] == 0.0), f"empty slot {i} not zeroed"
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+@pytest.mark.parametrize("kv_chunk", [None, 16])
+def test_fp_parity_ragged(use_pallas, kv_chunk):
+    q, k, v, kv_pos, q_pos, lens = make_case(0, lens=[48, 7, 0])
+    ref = reference(q, k, v, kv_pos, q_pos)
+    out = decode_attention(q, k, v, kv_pos, q_pos, mode="fp",
+                           kv_chunk=kv_chunk, use_pallas=use_pallas,
+                           interpret=use_pallas)
+    check(out, ref, lens)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_int8_dynamic_parity(use_pallas):
+    q, k, v, kv_pos, q_pos, lens = make_case(1, lens=[21, 48, 3])
+    qk, ks, kz = quantize_kv(k, 4)
+    qv, vs, vz = quantize_kv(v, 4)
+    ref = reference(q, dequantize_kv(qk, ks, kz), dequantize_kv(qv, vs, vz),
+                    kv_pos, q_pos)
+    out = decode_attention(q, qk, qv, kv_pos, q_pos, k_scale=ks, k_zero=kz,
+                           v_scale=vs, v_zero=vz, mode="int8", kv_chunk=16,
+                           use_pallas=use_pallas, interpret=use_pallas)
+    check(out, ref, lens, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_int8_static_parity(use_pallas):
+    q, k, v, kv_pos, q_pos, lens = make_case(2, lens=[10, 0, 30])
+    Hkv, C = k.shape[2], 4
+    rng = np.random.default_rng(9)
+    ss = jnp.asarray(1.0 + rng.uniform(size=(1, 1, Hkv, C)).astype(np.float32))
+    zz = jnp.asarray(rng.normal(size=(1, 1, Hkv, C)).astype(np.float32))
+    qk = quantize_kv_static(k, ss, zz)
+    qv = quantize_kv_static(v, ss, zz)
+    ref = reference(q, dequantize_kv(qk, ss, zz), dequantize_kv(qv, ss, zz),
+                    kv_pos, q_pos)
+    out = decode_attention(q, qk, qv, kv_pos, q_pos, k_scale=ss, k_zero=zz,
+                           v_scale=ss, v_zero=zz, mode="int8",
+                           per_entry_scales=False, kv_chunk=16,
+                           use_pallas=use_pallas, interpret=use_pallas)
+    check(out, ref, lens, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_gqa_groups(use_pallas):
+    """Hq > Hkv: grouped accumulation must equal the broadcast-to-Hq
+    oracle."""
+    q, k, v, kv_pos, q_pos, lens = make_case(3, Hq=8, Hkv=2, lens=[16, 48, 5])
+    ref = reference(q, k, v, kv_pos, q_pos)
+    out = decode_attention(q, k, v, kv_pos, q_pos, mode="fp", kv_chunk=16,
+                           use_pallas=use_pallas, interpret=use_pallas)
+    check(out, ref, lens)
+
+
+def test_dead_chunk_skip_matches_full_sweep():
+    """Chunks with no valid entry are skipped (cond / pl.when) — results
+    must be identical to a single-chunk sweep that computes everything."""
+    q, k, v, kv_pos, q_pos, lens = make_case(4, T=64, lens=[9, 12, 5])
+    full = decode_attention(q, k, v, kv_pos, q_pos, mode="fp",
+                            kv_chunk=64, use_pallas=False)
+    skip = decode_attention(q, k, v, kv_pos, q_pos, mode="fp",
+                            kv_chunk=8, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(skip), atol=2e-5)
+
+
+def test_slot_cache_roundtrip_fused_vs_legacy():
+    """`slot_layer_write` + `fused_slot_attention` == `slot_layer_update`
+    + `attend` on a live per-layer slice (the two read paths the
+    attention dispatch switches between)."""
+    cfg = get_arch("stablelm-1.6b").reduced()
+    N, T = 3, 32
+    cache = init_slot_cache(cfg, N, T, mode="int8")
+    cl = jax.tree_util.tree_map(lambda a: a[0], cache)   # layer-0 slice
+    rng = np.random.default_rng(5)
+    Hkv, D = cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.asarray(rng.integers(0, 4, size=(N, 1)), jnp.int32)
+    k_new = jnp.asarray(rng.normal(size=(N, 1, Hkv, D)).astype(np.float32))
+    v_new = jnp.asarray(rng.normal(size=(N, 1, Hkv, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(N, cfg.n_heads, D)).astype(np.float32))
+
+    k_full, v_full, kv_pos, _ = slot_layer_update(cl, k_new, v_new, positions)
+    ref = attend(q[:, None], k_full, v_full, positions, kv_pos)[:, 0]
+    new_cl = slot_layer_write(cl, k_new, v_new, positions)
+    out = fused_slot_attention(new_cl, q, positions[:, 0])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    # materialize_layer is the oracle view the fused path never builds
+    km, vm = materialize_layer(new_cl)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(k_full), atol=0)
+
+
+def test_property_random_occupancy():
+    """Property sweep: random slot occupancy / head groups / chunking —
+    fused (jnp path) always matches the oracle on occupied slots."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]),
+           st.sampled_from([None, 8, 16]))
+    def prop(seed, groups, kv_chunk):
+        Hkv = 2
+        q, k, v, kv_pos, q_pos, lens = make_case(
+            seed, N=4, T=32, Hq=Hkv * groups, Hkv=Hkv, D=16, C=4)
+        qk, ks, kz = quantize_kv(k, 4)
+        qv, vs, vz = quantize_kv(v, 4)
+        ref = reference(q, dequantize_kv(qk, ks, kz),
+                        dequantize_kv(qv, vs, vz), kv_pos, q_pos)
+        out = decode_attention(q, qk, qv, kv_pos, q_pos, k_scale=ks,
+                               k_zero=kz, v_scale=vs, v_zero=vz,
+                               mode="int8", kv_chunk=kv_chunk,
+                               use_pallas=False)
+        check(out, ref, lens, atol=1e-4)
+
+    prop()
+
+
+# ------------------------------------------------------- engine end-to-end ---
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 14)))
+               for _ in range(5)]
+    return cfg, model, params, prompts
+
+
+def run_engine(cfg, params, prompts, *, fused, kv_mode="int8", scales=None,
+               tokens=4):
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_len=48, max_new_tokens=tokens, prefill_bucket=8,
+        kv_mode=kv_mode, fused_attn=fused), kv_scales=scales)
+    for p in prompts:
+        eng.submit(p)
+    return [r.out for r in eng.drain()]
+
+
+@pytest.mark.parametrize("kv_mode", ["fp", "int8"])
+def test_engine_fused_greedy_matches_materialized(setup, kv_mode):
+    """100% greedy token agreement between the fused read and the
+    materialize-then-attend baseline, full generations."""
+    cfg, model, params, prompts = setup
+    base = run_engine(cfg, params, prompts, fused=False, kv_mode=kv_mode)
+    fused = run_engine(cfg, params, prompts, fused=True, kv_mode=kv_mode)
+    assert base == fused
+
+
+def test_engine_fused_static_scales(setup):
+    from repro.calib import collect_kv_stats, kv_static_scales
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, 48)) for _ in range(2)]
+    scales = kv_static_scales(collect_kv_stats(cfg, params, calib,
+                                               qchunks=4))
+    base = run_engine(cfg, params, prompts, fused=False, scales=scales)
+    fused = run_engine(cfg, params, prompts, fused=True, scales=scales)
+    assert base == fused
+
+
+# --------------------------------------------------- mid-flight hot-swap ---
+def test_hotswap_static_scales_midflight(setup):
+    """Loading a recipe into a RUNNING dynamic engine: scale arrays shrink
+    to per-layer constants, in-flight requests complete, and requests
+    admitted after the swap decode exactly like a from-scratch static
+    engine (slot attention is per-slot, so post-swap slots carry no
+    dynamic-era state)."""
+    from repro.calib import collect_kv_stats, kv_static_scales
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, 48)) for _ in range(2)]
+    scales = kv_static_scales(collect_kv_stats(cfg, params, calib,
+                                               qchunks=4))
+
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_len=48, max_new_tokens=4, prefill_bucket=8,
+        kv_mode="int8", fused_attn=True))
+    for p in prompts[:2]:
+        eng.submit(p)
+    eng.step()                       # admit + decode with dynamic scales
+    assert not eng.cache.static
+    dyn_scale_size = eng.cache.k_scale.size
+    eng.load_kv_scales(scales)       # swap WITHOUT draining the slots
+    assert eng.cache.static
+    assert eng.cache.k_scale.size < dyn_scale_size
+    assert eng.cache.k_scale.shape[1:3] == (1, 1)
+    fin = eng.drain()
+    assert len(fin) == 2 and all(len(r.out) == 4 for r in fin)
+
+    # requests admitted AFTER the swap behave as if the engine had been
+    # static from the start (drain() reports cumulatively — compare only
+    # the post-swap uids)
+    for p in prompts[2:]:
+        eng.submit(p)
+    post = [r.out for r in eng.drain() if r.uid >= 2]
+    fresh = run_engine(cfg, params, prompts[2:], fused=True, scales=scales)
+    assert post == fresh
+
+    with pytest.raises(ValueError, match="already serves static"):
+        eng.load_kv_scales(scales)
+
+
+def test_hotswap_requantizes_inflight_codes(setup):
+    """The swap requantizes live codes under the new constants: a decode
+    step right after the swap stays close to the fp-cache logits (static
+    INT8 tolerance), i.e. the cache is still readable, not garbage."""
+    from repro.calib import collect_kv_stats, kv_static_scales
+    from repro.engine.kvcache import write_prefill
+    from repro.models import transformer
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, 48)) for _ in range(2)]
+    scales = kv_static_scales(collect_kv_stats(cfg, params, calib,
+                                               qchunks=4))
+
+    def decode_logits(cache):
+        toks, pos = [], []
+        for slot, p in enumerate(prompts[:2]):
+            logits, pc = model.prefill(
+                params, cfg, {"tokens": jnp.asarray(p)[None]})
+            cache = write_prefill(cache, slot, pc, len(p))
+            toks.append(int(jnp.argmax(logits[0, -1])))
+            pos.append(len(p))
+        logits, _ = transformer.decode_step_slots(
+            params, cfg, cache, jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32), fused=True)
+        return np.asarray(logits[:, -1])
+
+    lf = decode_logits(init_slot_cache(cfg, 2, 48, mode="fp"))
+    dyn = init_slot_cache(cfg, 2, 48, mode="int8")
+    # prefill into the dynamic cache, THEN swap, then decode
+    toks, pos = [], []
+    cache = dyn
+    for slot, p in enumerate(prompts[:2]):
+        logits, pc = model.prefill(params, cfg,
+                                   {"tokens": jnp.asarray(p)[None]})
+        cache = write_prefill(cache, slot, pc, len(p))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+        pos.append(len(p))
+    cache = hotswap_static_scales(cache, scales)
+    logits, _ = transformer.decode_step_slots(
+        params, cfg, cache, jnp.asarray(toks, jnp.int32)[:, None],
+        jnp.asarray(pos, jnp.int32), fused=True)
+    ls = np.asarray(logits[:, -1])
+    # double quantization (dynamic → static) adds at most one extra step
+    # of each grid: bounded by twice the static tolerance
+    assert np.max(np.abs(ls - lf)) <= 2 * 2.5 * 0.05, np.max(np.abs(ls - lf))
