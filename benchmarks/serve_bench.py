@@ -8,17 +8,27 @@ per step, so the long tail no longer stalls short requests.
 
 The INT8 cache is additionally served two ways: the legacy
 materialize-then-attend read (dequantize the whole slot cache per decode
-step) and the fused dequant-in-kernel read (`--fused` path,
-`repro.kernels.decode_attention`) — the fused-vs-materialized delta and
+step; now behind `fused_attn=False` — the engine default flipped to
+fused) and the fused dequant-in-kernel read
+(`repro.kernels.decode_attention`) — the fused-vs-materialized delta and
 per-decode-step latency percentiles are tracked per PR. `--max-len`
 defaults to 512 so the cache is deep enough for the read path to
 dominate the step.
 
+A mixed prefill+decode SOAK config additionally serves a long-prompt
+workload two ways: legacy ONE-SHOT prefill (every admission blocks the
+step for a whole prompt's prefill — the stall baseline) vs CHUNKED fused
+prefill (`prefill_chunk` tokens per step, quantize-in-kernel slot
+writes, `kernels/prefill_attention.py`). It reports TTFT p50/p95, the
+p95 of full-step latency among steps that did prefill work (decode-step
+latency under concurrent prefill — the admission-stall metric), and
+chunked-vs-one-shot tokens/s + greedy agreement.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --requests 24
 
 Emits BENCH_serve.json next to this file (tokens/s, per-step p50/p95,
-TTFT, speedups, and greedy token agreement across every pair of paths)
-so the perf trajectory accumulates.
+TTFT, speedups, soak percentiles, and greedy token agreement across
+every pair of paths) so the perf trajectory accumulates.
 """
 import argparse
 import json
@@ -50,6 +60,36 @@ def make_workload(rng, n_requests, vocab, long_every=6,
         budget = long_tokens if is_long else short_tokens
         reqs.append((rng.integers(0, vocab, size=plen), budget))
     return reqs
+
+
+def make_soak_workload(rng, n_requests, vocab, long_prompt=(144, 208),
+                       short_prompt=(4, 10), long_tokens=16,
+                       short_tokens=48):
+    """Concurrent prefill+decode stress: every other request carries a
+    LONG prompt (one-shot prefill of it stalls the whole step for the
+    prompt length) while the short requests in neighboring slots are
+    mid-generation — the regime chunked prefill targets. Queue depth is
+    kept above the slot count so admissions keep happening while slots
+    decode."""
+    reqs = []
+    for i in range(n_requests):
+        if i % 2:
+            plen = int(rng.integers(*long_prompt))
+            budget = long_tokens
+        else:
+            plen = int(rng.integers(*short_prompt))
+            budget = short_tokens
+        reqs.append((rng.integers(0, vocab, size=plen), budget))
+    return reqs
+
+
+def run_soak(cfg, params, workload, max_len, slots, prefill_chunk,
+             repeats=1):
+    """One soak config: INT8 cache, fused decode (the engine defaults),
+    one-shot (prefill_chunk=0) or chunked prefill."""
+    ecfg = EngineConfig(n_slots=slots, max_len=max_len, kv_mode="int8",
+                        prefill_bucket=16, prefill_chunk=prefill_chunk)
+    return run_engine(cfg, params, workload, ecfg, repeats)
 
 
 def run_wave(srv, workload, repeats=1):
@@ -102,6 +142,15 @@ def main():
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--repeats", type=int, default=3,
                     help="best-of-N runs per engine config")
+    ap.add_argument("--soak-requests", type=int, default=10,
+                    help="requests in the mixed prefill+decode soak "
+                         "(0 disables the soak)")
+    ap.add_argument("--soak-prefill-chunk", type=int, default=96,
+                    help="prompt-token budget per step for the chunked "
+                         "soak config (too-small budgets pay a dispatch "
+                         "per bucket-rounded chunk and under-fill the "
+                         "whole-chunk-or-nothing budget; ~4x the "
+                         "prefill_bucket is the sweet spot on the CI box)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
@@ -120,7 +169,10 @@ def main():
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
                         prefill_bucket=16)
 
-    ecfg8 = EngineConfig(**{**ecfg.__dict__, "kv_mode": "int8"})
+    # fused_attn defaults ON now — the materialized read is the explicit
+    # oracle config, the fused one is the engine default
+    ecfg8 = EngineConfig(**{**ecfg.__dict__, "kv_mode": "int8",
+                            "fused_attn": False})
     ecfg8f = EngineConfig(**{**ecfg8.__dict__, "fused_attn": True})
 
     # warm the (process-shared) jit caches on a throwaway pass so wall
@@ -155,6 +207,46 @@ def main():
     agree_int8_fp = agreement(eng8_out, eng_out)
     agree_fused = agreement(eng8f_out, eng8_out)
 
+    # ---- mixed prefill+decode soak: one-shot stall baseline vs chunked
+    soak = None
+    if args.soak_requests:
+        soak_wl = make_soak_workload(rng, args.soak_requests, cfg.vocab)
+        for pc in (0, args.soak_prefill_chunk):     # warm all jit buckets
+            run_soak(cfg, params, soak_wl, args.max_len, args.slots, pc)
+        # INTERLEAVED best-of-N: the tracked chunked-vs-oneshot ratios
+        # compare the two configs, so back-to-back repeat pairs keep a
+        # noisy box from loading one side's repeats into a bad regime
+        stall_out = stall = chunk_out = chunk = None
+        for _ in range(args.repeats):
+            so, sm = run_soak(cfg, params, soak_wl, args.max_len,
+                              args.slots, 0)
+            co, cm = run_soak(cfg, params, soak_wl, args.max_len,
+                              args.slots, args.soak_prefill_chunk)
+            if stall is None or sm["tokens_per_s"] > stall["tokens_per_s"]:
+                stall_out, stall = so, sm
+            if chunk is None or cm["tokens_per_s"] > chunk["tokens_per_s"]:
+                chunk_out, chunk = co, cm
+        pick = ("tokens_per_s", "ttft_p50_s", "ttft_p95_s",
+                "decode_step_p95_s", "step_p95_s",
+                "step_with_prefill_p95_s", "steps_with_prefill",
+                "prefill_chunks", "wall_s")
+        soak = {
+            "requests": len(soak_wl),
+            "prefill_chunk": args.soak_prefill_chunk,
+            "oneshot": {k: stall[k] for k in pick},
+            "chunked": {k: chunk[k] for k in pick},
+            "speedup_chunked_vs_oneshot_tokens_per_s":
+                chunk["tokens_per_s"] / stall["tokens_per_s"],
+            # THE stall metric: p95 full-step latency among steps that did
+            # prefill work — one-shot pays a whole prompt there, chunked
+            # pays at most the chunk budget
+            "step_with_prefill_p95_improvement":
+                stall["step_with_prefill_p95_s"]
+                / chunk["step_with_prefill_p95_s"],
+            "greedy_agreement_chunked_vs_oneshot":
+                agreement(chunk_out, stall_out),
+        }
+
     result = {
         "arch": cfg.name,
         "requests": len(workload),
@@ -170,6 +262,7 @@ def main():
         "greedy_agreement_engine_vs_wave": agree_engine_wave,
         "greedy_agreement_int8kv_vs_fp": agree_int8_fp,
         "greedy_agreement_fused_vs_materialized": agree_fused,
+        "soak": soak,
     }
 
     def steps(m):
@@ -194,6 +287,24 @@ def main():
     print(f"greedy agreement: engine=wave {agree_engine_wave:.1%}, "
           f"int8=fp {agree_int8_fp:.1%}, fused=materialized "
           f"{agree_fused:.1%}")
+    if soak:
+        s1, s2 = soak["oneshot"], soak["chunked"]
+
+        def ms(x):
+            return f"{x*1e3:.1f} ms" if x is not None else "n/a"
+        print(f"soak oneshot: {s1['tokens_per_s']:8.1f} tok/s, ttft p50 "
+              f"{ms(s1['ttft_p50_s'])} p95 {ms(s1['ttft_p95_s'])}, "
+              f"step-with-prefill p95 {ms(s1['step_with_prefill_p95_s'])}")
+        print(f"soak chunked: {s2['tokens_per_s']:8.1f} tok/s, ttft p50 "
+              f"{ms(s2['ttft_p50_s'])} p95 {ms(s2['ttft_p95_s'])}, "
+              f"step-with-prefill p95 {ms(s2['step_with_prefill_p95_s'])} "
+              f"(chunk {soak['prefill_chunk']})")
+        print(f"soak: step-with-prefill p95 "
+              f"{soak['step_with_prefill_p95_improvement']:.2f}x better "
+              f"chunked, tokens/s "
+              f"{soak['speedup_chunked_vs_oneshot_tokens_per_s']:.2f}x, "
+              f"greedy agreement "
+              f"{soak['greedy_agreement_chunked_vs_oneshot']:.1%}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, default=str)
     print(f"wrote {os.path.abspath(args.out)}")

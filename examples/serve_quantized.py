@@ -28,10 +28,16 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"])
-    ap.add_argument("--fused-attn", action="store_true",
+    ap.add_argument("--fused-attn", action=argparse.BooleanOptionalAction,
+                    default=True,
                     help="read decode attention straight off the slot "
                          "cache (dequant-in-kernel, no full-precision "
-                         "cache copy)")
+                         "cache copy). Default ON; --no-fused-attn "
+                         "selects the legacy materializing oracle")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked fused prefill: at most this many prompt "
+                         "tokens per engine step, K/V quantized in-kernel "
+                         "straight into the slot cache (0 = one-shot)")
     ap.add_argument("--recipe", default=None,
                     help="serve from a calibration recipe dir (see "
                          "`python -m repro.launch.serve --save-recipe`): "
@@ -45,7 +51,8 @@ def main():
     ecfg = EngineConfig(max_len=128, n_slots=4,
                         max_new_tokens=args.new_tokens,
                         kv_mode=args.kv_mode,
-                        fused_attn=args.fused_attn)
+                        fused_attn=args.fused_attn,
+                        prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10))
                for _ in range(args.requests)]

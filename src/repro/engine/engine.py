@@ -8,13 +8,26 @@ model entry points. The serving loop is token-level:
     eng.submit(prompt_a); eng.submit(prompt_b)
     finished = eng.drain()
 
-Each `step()` (1) admits queued requests into free slots — every admit is
-a per-request prefill (batch 1, right-padded to a length bucket so jit
-recompiles are bounded; padding never pollutes the cache because only the
-true prompt positions are marked valid); (2) runs ONE batched decode step
-over all slots at their own positions; (3) retires finished slots so the
-next step can refill them. A long generation therefore occupies exactly
-one slot instead of stalling a whole wave.
+Each `step()` (1) admits queued requests into free slots; (2) prefills —
+either ONE-SHOT (`prefill_chunk=0`: a per-request dense prefill whose fp
+cache `write_prefill` re-quantizes into the slot, batch 1, right-padded
+to a length bucket so jit recompiles are bounded) or CHUNKED
+(`prefill_chunk>0`: at most that many prompt tokens per step stream
+through `transformer.prefill_chunk_slots`, whose fused kernel quantizes
+K/V in-kernel and writes codes straight into the slot cache — no fp
+prefill cache exists and a long prompt no longer stalls decoding, see
+DESIGN.md §6); (3) runs ONE batched decode step over all decoding slots
+at their own positions; (4) retires finished slots so the next step can
+refill them. A long generation therefore occupies exactly one slot
+instead of stalling a whole wave, and with chunked prefill a long PROMPT
+occupies at most `prefill_chunk` tokens of any step.
+
+Mid-prefill slots are invisible to decode (`Scheduler.active_slots`
+excludes them) but still ride along in the fixed-shape decode batch,
+parked at their next-unwritten position: the parked step writes garbage
+K/V at exactly the row the slot's NEXT prefill chunk overwrites (and the
+chunk kernel masks cache rows at >= pos_start), so the parked write can
+never leak into any attention result.
 """
 from __future__ import annotations
 
@@ -33,6 +46,13 @@ from .kvcache import clear_slot, init_slot_cache, write_prefill
 from .scheduler import EngineRequest, Scheduler
 
 ENGINE_FAMILIES = ("dense", "moe", "vlm")
+
+#: Materialization-counter hook: incremented once per LEGACY one-shot
+#: prefill dispatch — each one materializes a dense full-precision
+#: (L, S, Hkv, D) cache that `write_prefill` then pads, re-quantizes and
+#: copies into the slot cache. The fused chunked-prefill path must never
+#: bump it (asserted in tests/test_prefill_attention.py).
+FP_PREFILL_MATERIALIZATIONS = 0
 
 
 def bucket_len(n: int, bucket: int, max_len: int) -> int:
@@ -84,6 +104,21 @@ def _jitted_entry_points(cfg, fused: bool, greedy: bool):
     return decode, _jitted_prefill(cfg)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_chunk_prefill(cfg):
+    """Process-wide jitted chunked-prefill entry point. One compile per
+    CHUNK BUCKET shape (the (1, Sc) tokens arg); slot / pos_start / length
+    are traced scalars, so slots and chunk offsets never recompile. The
+    cache is donated — chunk writes update the slot arrays in place."""
+    from repro.models import transformer
+
+    def chunk(p, c, toks, slot, pos_start, length):
+        return transformer.prefill_chunk_slots(p, cfg, c, toks, slot,
+                                               pos_start, length)
+
+    return jax.jit(chunk, donate_argnums=(1,))
+
+
 # slot/length stay traced: one compile per prefill bucket shape, shared by
 # every engine in the process; the old cache is dead after each call, so
 # its buffers are donated (in-place row writes)
@@ -102,9 +137,17 @@ class EngineConfig:
     kv_qchunks: int = 4                 # ranges per head-vector in int8 mode
     kv_dtype: str = "float32"           # fp-mode storage; "bfloat16" on TPU
     prefill_bucket: int = 16            # prompt lengths round up to a multiple
-    fused_attn: bool = False            # decode reads via the fused dequant-
+    fused_attn: bool = True             # decode reads via the fused dequant-
                                         # in-kernel attention (no full-
-                                        # precision cache copy)
+                                        # precision cache copy). False =
+                                        # legacy materialize-then-attend,
+                                        # kept as the cross-checked oracle
+    prefill_chunk: int = 0              # >0: chunked fused prefill — admit
+                                        # at most this many prompt tokens
+                                        # per step, quantize-in-kernel slot
+                                        # writes, decode keeps running while
+                                        # long prompts stream in. 0 = legacy
+                                        # one-shot prefill + write_prefill
 
 
 class Engine:
@@ -145,16 +188,28 @@ class Engine:
         self._greedy = ecfg.temperature <= 0
         self._decode, self._prefill = _jitted_entry_points(
             cfg, ecfg.fused_attn, self._greedy)
+        self._chunk_prefill = (_jitted_chunk_prefill(cfg)
+                               if ecfg.prefill_chunk else None)
         self._write = _WRITE
         self._clear = _CLEAR
         # host-side slot state
         N = ecfg.n_slots
         self._last_tok = np.zeros(N, np.int32)
         self._pos = np.zeros(N, np.int32)
+        self._prefill_prog = np.zeros(N, np.int64)   # prompt tokens written
         self._uid = 0
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_prefill_chunks = 0
         self.decode_step_s: list[float] = []
+        # full step() wall + prompt tokens prefilled + decoders already
+        # mid-generation at step start: the admission-stall telemetry
+        # (serve_bench's soak reports the p95 of step latency among steps
+        # whose prefill work ran while OTHER requests were decoding —
+        # prefill with an idle decode batch stalls nobody)
+        self.step_s: list[float] = []
+        self.step_prefill_tokens: list[int] = []
+        self.step_decode_slots: list[int] = []
         self._t_start: Optional[float] = None
 
     def load_kv_scales(self, kv_scales: dict) -> None:
@@ -210,21 +265,12 @@ class Engine:
         self._pos[slot] = 0
         self._last_tok[slot] = 0
 
-    def _admit_one(self, slot: int, req: EngineRequest):
-        if req.max_new_tokens <= 0:                   # explicit 0-token ask
-            req.t_first_token = req.t_submit
-            self.sched.retire(slot)
-            return
-        S = len(req.prompt)
-        Sp = self._bucket(S)
-        toks = np.zeros((1, Sp), np.int32)
-        toks[0, :S] = req.prompt                      # right-pad
-        logits, pcache = self._prefill(self.params, jnp.asarray(toks))
-        self.n_prefills += 1
-        # only [0, S) becomes visible; bucket padding stays masked forever
-        self.cache = self._write(self.cache, jnp.int32(slot), pcache,
-                                 jnp.int32(S))
-        first = int(self._sample(logits[0, S - 1]))
+    def _start_decoding(self, slot: int, req: EngineRequest, logits_row,
+                        S: int):
+        """Shared admission tail: sample the FIRST generated token from the
+        prompt's final logits row and move the slot into decode (or retire
+        it on eos / exhausted budget)."""
+        first = int(self._sample(logits_row))
         req.t_first_token = self.clock()
         if first == self.ecfg.eos_id:                 # eos is never emitted
             self._retire(slot)
@@ -235,19 +281,129 @@ class Engine:
         if len(req.out) >= req.max_new_tokens or S >= self.ecfg.max_len:
             self._retire(slot)
 
+    def _admit_one(self, slot: int, req: EngineRequest) -> int:
+        """Legacy ONE-SHOT admission: dense per-request prefill (this is
+        the fp (L, S, Hkv, D) materialization) + write_prefill's
+        pad/requantize/copy. Returns prompt tokens prefilled."""
+        global FP_PREFILL_MATERIALIZATIONS
+        if req.max_new_tokens <= 0:                   # explicit 0-token ask
+            req.t_first_token = req.t_submit
+            self.sched.retire(slot)
+            return 0
+        S = len(req.prompt)
+        Sp = self._bucket(S)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :S] = req.prompt                      # right-pad
+        logits, pcache = self._prefill(self.params, jnp.asarray(toks))
+        self.n_prefills += 1
+        FP_PREFILL_MATERIALIZATIONS += 1
+        # only [0, S) becomes visible; bucket padding stays masked forever
+        self.cache = self._write(self.cache, jnp.int32(slot), pcache,
+                                 jnp.int32(S))
+        self._start_decoding(slot, req, logits[0, S - 1], S)
+        return S
+
+    # --------------------------------------------------- chunked prefill --
+    def _admit_chunked(self, slot: int, req: EngineRequest):
+        """Chunked admission: mark the slot mid-prefill; `_prefill_work`
+        streams its prompt in over the next step(s)."""
+        if req.max_new_tokens <= 0:
+            req.t_first_token = req.t_submit
+            self.sched.retire(slot)
+            return
+        self.sched.begin_prefill(slot)
+        self._prefill_prog[slot] = 0
+        self._pos[slot] = 0                           # parked (see below)
+        self._last_tok[slot] = 0
+
+    def _prefill_work(self) -> int:
+        """Spend this step's `prefill_chunk`-token budget on mid-prefill
+        slots (FCFS). Each dispatched chunk streams through the fused
+        kernel: K/V quantized in-kernel, codes written straight into the
+        slot rows. A slot whose prompt completes samples its first token
+        from the chunk's last logits row and joins the decode batch; a
+        slot still mid-prefill stays parked at its next-unwritten position
+        (`_pos` = progress), so the decode batch's fixed-shape ride-along
+        write lands exactly where the NEXT chunk will overwrite it.
+
+        Chunks are NEVER split to fit leftover budget: a slot's next chunk
+        is always min(prefill_chunk, remaining prompt), and if the step's
+        remaining budget cannot cover it the work waits for the next step.
+        Chunk boundaries are therefore a pure function of (prompt length,
+        prefill_chunk) — independent of concurrent load — so a request
+        generates the exact same tokens whether it prefilled alone or
+        under contention (an int8 cache makes boundary placement visible:
+        tokens after a boundary attend the QUANTIZED prefix, so
+        load-dependent boundaries would make generations irreproducible).
+        Returns prompt tokens processed."""
+        budget = self.ecfg.prefill_chunk
+        spent = 0
+        for slot in self.sched.prefill_slots():
+            req = self.sched.slots[slot]
+            S = len(req.prompt)
+            done = int(self._prefill_prog[slot])
+            n = min(self.ecfg.prefill_chunk, S - done)
+            if n > budget:          # whole chunk or nothing (FCFS head
+                break               # waits; boundaries stay load-free)
+            Sc = bucket_len(n, self.ecfg.prefill_bucket,
+                            self.ecfg.prefill_chunk)
+            toks = np.zeros((1, Sc), np.int32)
+            toks[0, :n] = req.prompt[done:done + n]   # right-pad the chunk
+            logits, self.cache = self._chunk_prefill(
+                self.params, self.cache, jnp.asarray(toks), jnp.int32(slot),
+                jnp.int32(done), jnp.int32(n))
+            self.n_prefill_chunks += 1
+            budget -= n
+            spent += n
+            done += n
+            self._prefill_prog[slot] = done
+            self._pos[slot] = done                    # parked position
+            if done >= S:                             # prompt complete
+                self.sched.finish_prefill(slot)
+                self._start_decoding(slot, req, logits[0], S)
+        return spent
+
     def step(self) -> list[EngineRequest]:
-        """Admit + one batched decode step. Returns requests finishing now."""
+        """Admit + (chunk-budgeted) prefill + one batched decode step.
+        Returns requests finishing now."""
         if self._t_start is None:
             self._t_start = self.clock()
+        t_step0 = self.clock()
         n_done_before = len(self.sched.finished)
+        # decoders that were ALREADY mid-generation when this step's
+        # prefill work ran — the requests a prefill stall actually delays
+        # (a slot admitted and first-decoded in the same step was not
+        # waiting on anything; counting it would inflate the one-shot
+        # stall baseline with the idle-engine admission burst)
+        n_decoding_before = len(self.sched.active_slots())
+        prefill_tokens = 0
         for slot, req in self.sched.admit():
-            self._admit_one(slot, req)
+            if self.ecfg.prefill_chunk:
+                self._admit_chunked(slot, req)
+            else:
+                prefill_tokens += self._admit_one(slot, req)
+        if self.ecfg.prefill_chunk:
+            prefill_tokens = self._prefill_work()
+            # nobody is decoding ⇒ nobody can be stalled: keep spending
+            # whole-chunk budgets until a slot finishes its prompt and
+            # joins the decode batch (the chunk budget only throttles
+            # prefill that would delay CONCURRENT decode steps; a
+            # decode-idle engine prefills at one-shot speed)
+            while not self.sched.active_slots() and \
+                    self.sched.prefill_slots():
+                prefill_tokens += self._prefill_work()
         active = self.sched.active_slots()
         if active:
             # idle slots ride along at pos 0 with token 0 (fixed decode
             # shape == jit cache of exactly one entry); _retire cleared
             # their kv_pos rows, so each idle step re-marks only its own
-            # t=0 entry, and the next admit rewrites the row wholesale
+            # t=0 entry, and the next admit rewrites the row wholesale.
+            # Mid-prefill slots ride along the same way, parked at their
+            # next-unwritten position: the garbage row the ride-along
+            # write marks valid is overwritten by the slot's next chunk,
+            # and the chunk kernel masks cache rows at >= pos_start, so
+            # it can never be attended (per-slot attention shields every
+            # other request)
             tokens = jnp.asarray(self._last_tok[:, None])
             pos = jnp.asarray(self._pos)
             t0 = self.clock()
@@ -276,6 +432,9 @@ class Engine:
                         or self._pos[slot] >= self.ecfg.max_len):
                     self._retire(slot)
             self.sched.note_step(len(active))
+        self.step_s.append(self.clock() - t_step0)
+        self.step_prefill_tokens.append(prefill_tokens)
+        self.step_decode_slots.append(n_decoding_before)
         return self.sched.finished[n_done_before:]
 
     def drain(self) -> list[EngineRequest]:
@@ -293,6 +452,13 @@ class Engine:
         total_tokens = sum(len(r.out) for r in fin)
         wall = (self.clock() - self._t_start) if self._t_start else 0.0
         steps = np.asarray(self.decode_step_s, np.float64)
+        full = np.asarray(self.step_s, np.float64)
+        pmask = (np.asarray(self.step_prefill_tokens, np.int64) > 0) \
+            & (np.asarray(self.step_decode_slots, np.int64) > 0)
+        withp = full[pmask[:full.size]] if full.size else full
+
+        def p(a, q):
+            return float(np.percentile(a, q)) if a.size else None
         return {
             "n_finished": len(fin),
             "total_tokens": total_tokens,
@@ -300,17 +466,26 @@ class Engine:
             "tokens_per_s": total_tokens / wall if wall > 0 else None,
             "decode_steps": self.n_decode_steps,
             "prefills": self.n_prefills,
+            "prefill_chunks": self.n_prefill_chunks,
+            "prefill_chunk": self.ecfg.prefill_chunk,
             "slot_utilization": self.sched.utilization(),
             "queue_depth_max": max(self.sched.queue_depth_hist, default=0),
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
             "ttft_p50_s": float(np.median(ttfts)) if ttfts else None,
+            "ttft_p95_s": (float(np.percentile(ttfts, 95))
+                           if ttfts else None),
             "request_tokens_per_s_mean": float(np.mean(tps)) if tps else None,
-            "decode_step_p50_s": (float(np.percentile(steps, 50))
-                                  if steps.size else None),
-            "decode_step_p95_s": (float(np.percentile(steps, 95))
-                                  if steps.size else None),
+            "decode_step_p50_s": p(steps, 50),
+            "decode_step_p95_s": p(steps, 95),
             "decode_step_mean_s": (float(steps.mean())
                                    if steps.size else None),
+            # full-step latency: the admission-stall telemetry — a step
+            # that prefilled a whole prompt one-shot blocks every decoding
+            # slot for that long; chunked prefill bounds it by the budget
+            "step_p50_s": p(full, 50),
+            "step_p95_s": p(full, 95),
+            "step_with_prefill_p95_s": p(withp, 95),
+            "steps_with_prefill": int(pmask.sum()),
             "fused_attn": self.ecfg.fused_attn,
             "kv_mode": self.cache.mode,
             "kv_static_scales": self.cache.static,

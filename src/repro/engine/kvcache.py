@@ -282,6 +282,66 @@ def fused_slot_attention(cl: SlotKVCache, q, q_pos, *, use_pallas=None,
                             interpret=interpret)
 
 
+def slot_chunk_prefill(cl: SlotKVCache, q, k_new, v_new, slot, pos_start,
+                       length, *, kv_chunk=None, use_pallas=None,
+                       interpret: bool = False):
+    """One CHUNKED-PREFILL step for ONE layer and ONE slot: fused causal
+    attention of the chunk's queries over [the slot's already-written
+    rows] + [the chunk's own fp K/V], with the chunk quantized in-kernel
+    and the codes scattered straight into rows [pos_start, pos_start+Sq)
+    of the slot — the prefill-side twin of `slot_layer_write` +
+    `fused_slot_attention`. No full-precision copy of the cache (and no
+    dense per-request prefill cache at all) ever exists.
+
+    cl: per-layer slice; q (Sq, Hq, D), k_new/v_new (Sq, Hkv, D) post-RoPE;
+    slot/pos_start/length are traced scalars. Only the first `length` rows
+    become visible (`kv_pos` = absolute position; the padded tail is
+    re-marked -1, which is a no-op on rows the next chunk will overwrite
+    and drops rows past max_len). Returns (o (Sq, Hq, D), new_cl).
+    """
+    from repro.kernels.prefill_attention import prefill_attention
+
+    Sq = q.shape[0]
+    take = functools.partial(jax.lax.dynamic_index_in_dim, index=slot,
+                             axis=0, keepdims=False)
+    ck, cv, kpos = take(cl.k), take(cl.v), take(cl.kv_pos)
+    kw = dict(kv_chunk=kv_chunk, use_pallas=use_pallas, interpret=interpret)
+    if cl.mode == "int8" and cl.static:
+        o, (qk, qv) = prefill_attention(
+            q, k_new, v_new, ck, cv, kpos, pos_start, length,
+            k_scale=cl.k_scale[0, 0], k_zero=cl.k_zero[0, 0],
+            v_scale=cl.v_scale[0, 0], v_zero=cl.v_zero[0, 0],
+            mode="int8", per_entry_scales=False, **kw)
+        scale_upd = {}
+    elif cl.mode == "int8":
+        o, (qk, qv, ks, kz, vs, vz) = prefill_attention(
+            q, k_new, v_new, ck, cv, kpos, pos_start, length,
+            k_scale=take(cl.k_scale), k_zero=take(cl.k_zero),
+            v_scale=take(cl.v_scale), v_zero=take(cl.v_zero),
+            mode="int8", per_entry_scales=True, **kw)
+        scale_upd = dict(k_scale=(cl.k_scale, ks), k_zero=(cl.k_zero, kz),
+                         v_scale=(cl.v_scale, vs), v_zero=(cl.v_zero, vz))
+    else:
+        o, _ = prefill_attention(q, k_new, v_new, ck, cv, kpos, pos_start,
+                                 length, mode="fp", **kw)
+        qk, qv = k_new, v_new
+        scale_upd = {}
+
+    rows = pos_start + jnp.arange(Sq, dtype=jnp.int32)
+    posv = jnp.where(jnp.arange(Sq) < length, rows, jnp.int32(-1))
+
+    def put(buf, upd):
+        # scatter with OOB drop: a bucket-padded final chunk may stick out
+        # past max_len — those rows carry no valid tokens by construction
+        return buf.at[slot, rows].set(upd.astype(buf.dtype), mode="drop")
+
+    new_cl = dataclasses.replace(
+        cl, k=put(cl.k, qk), v=put(cl.v, qv),
+        kv_pos=cl.kv_pos.at[slot, rows].set(posv, mode="drop"),
+        **{f: put(buf, upd) for f, (buf, upd) in scale_upd.items()})
+    return o, new_cl
+
+
 def hotswap_static_scales(cache: SlotKVCache, kv_scales: dict
                           ) -> SlotKVCache:
     """Switch a DYNAMIC int8 cache to static recipe scales mid-flight —

@@ -53,6 +53,11 @@ class Scheduler:
         self.queue: collections.deque[EngineRequest] = collections.deque()
         self.slots: list[Optional[EngineRequest]] = [None] * n_slots
         self.finished: list[EngineRequest] = []
+        # slots admitted but not fully prefilled yet (chunked-prefill
+        # engines): they hold their request (the slot is occupied) but are
+        # NOT active for decode — a mid-prefill slot must stay invisible
+        # to the decode batch until its whole prompt is written
+        self._prefilling: list[int] = []        # FCFS begin order
         # counters for the engine's metrics snapshot
         self.n_submitted = 0
         self.n_admitted = 0
@@ -70,7 +75,24 @@ class Scheduler:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def active_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slots) if r is not None]
+        """Slots decoding this step — occupied and NOT mid-prefill."""
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and i not in self._prefilling]
+
+    # ------------------------------------------- chunked-prefill states --
+    def begin_prefill(self, slot: int) -> None:
+        """Mark an admitted slot as mid-prefill (occupied, not decoding)."""
+        assert self.slots[slot] is not None, f"prefill of empty slot {slot}"
+        if slot not in self._prefilling:
+            self._prefilling.append(slot)
+
+    def finish_prefill(self, slot: int) -> None:
+        """Prompt fully written — the slot joins the decode batch."""
+        self._prefilling.remove(slot)
+
+    def prefill_slots(self) -> list[int]:
+        """Mid-prefill slots in FCFS begin order (the chunk-budget order)."""
+        return list(self._prefilling)
 
     def admit(self) -> list[tuple[int, EngineRequest]]:
         """Move queued requests into free slots (FCFS). Returns the
@@ -93,6 +115,8 @@ class Scheduler:
         req.done = True
         req.t_done = self.clock()
         self.slots[slot] = None
+        if slot in self._prefilling:            # retired mid-prefill (eos
+            self._prefilling.remove(slot)       # on first token, 0 budget)
         self.finished.append(req)
         return req
 

@@ -75,6 +75,21 @@ def act_split_quantize(x: jnp.ndarray, *, bits: int = 8, n_chunks: int = 3,
     )(x)
 
 
+def chunk_id_map(n: int, n_chunks: int) -> np.ndarray:
+    """(n,) int32 chunk id per column for splitting a width-``n`` axis into
+    ``n_chunks`` contiguous ``array_split`` chunks (uneven widths put the
+    extra columns in the leading chunks; even widths reproduce the plain
+    reshape grouping exactly). Shared by the static act-quant kernel below
+    and the prefill-attention epilogue (`kernels/prefill_attention.py`) —
+    gathering per-chunk (scale, zero) through this map turns chunked
+    quantization into a single per-column broadcast multiply, one kernel
+    launch for any chunking."""
+    from repro.core.splitquant import activation_chunk_bounds
+
+    bounds = activation_chunk_bounds(n, n_chunks)
+    return np.repeat(np.arange(n_chunks), np.diff(bounds)).astype(np.int32)
+
+
 def _static_kernel(x_ref, scale_ref, zero_ref, q_ref, *, bits: int):
     x = x_ref[...].astype(jnp.float32)                 # (br, N)
     scale = scale_ref[...]                             # (1, N) per-column
@@ -108,14 +123,10 @@ def act_split_quantize_static(x: jnp.ndarray, scale: jnp.ndarray,
     layer call, now 1. Each program owns a full-width (block_r, N) tile;
     at serving widths (N ≤ 8k) that is ≪ VMEM, shrink block_r if N grows.
     """
-    from repro.core.splitquant import activation_chunk_bounds
-
     R, N = x.shape
     n_chunks = scale.shape[-1]
     assert R % block_r == 0, (x.shape, block_r)
-    bounds = activation_chunk_bounds(N, n_chunks)
-    cid = jnp.asarray(np.repeat(np.arange(n_chunks),
-                                np.diff(bounds)), jnp.int32)   # (N,)
+    cid = jnp.asarray(chunk_id_map(N, n_chunks))               # (N,)
     scale_row = jnp.take(scale.astype(jnp.float32).reshape(-1), cid)[None]
     zero_row = jnp.take(zero.astype(jnp.float32).reshape(-1), cid)[None]
     return pl.pallas_call(

@@ -118,11 +118,21 @@ def main():
     ap.add_argument("--kv-mode", default="fp", choices=["fp", "int8"],
                     help="engine KV cache storage (int8 = SplitQuant §4.2 "
                          "chunked-range quantization of K/V at rest)")
-    ap.add_argument("--fused-attn", action="store_true",
+    ap.add_argument("--fused-attn", action=argparse.BooleanOptionalAction,
+                    default=True,
                     help="decode attention reads the slot cache through "
                          "the fused dequant-in-kernel path (Pallas on "
                          "TPU, chunked jnp elsewhere) — no full-precision "
-                         "cache copy per step")
+                         "cache copy per step. Default ON; "
+                         "--no-fused-attn selects the legacy materialize-"
+                         "then-attend oracle")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked fused prefill: admit at most this many "
+                         "prompt tokens per engine step, quantizing K/V "
+                         "in-kernel straight into the slot cache (no "
+                         "dense fp prefill cache, decode keeps running "
+                         "under long prompts). 0 = legacy one-shot "
+                         "prefill")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     ap.add_argument("--recipe", default=None,
@@ -186,7 +196,8 @@ def main():
     eng = Engine(cfg, params, EngineConfig(
         n_slots=args.slots, max_len=256,
         max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
-        kv_qchunks=kv_qchunks, fused_attn=args.fused_attn),
+        kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
+        prefill_chunk=args.prefill_chunk),
         kv_scales=kv_scales)
     for p in prompts:
         eng.submit(p)

@@ -195,7 +195,8 @@ def tshard_decode_attend(q, k, v, q_pos, kv_pos, *, window=None):
 def attention_block(p, x, cfg, positions, cache_layer=None, *,
                     causal=True, window=None, kv_chunk=None,
                     cross_kv=None, want_kv=False, tshard_decode=False,
-                    kv_pos_override=None, fused_attn=False):
+                    kv_pos_override=None, fused_attn=False,
+                    slot_chunk=None):
     """Full attention sub-layer: projections + RoPE + (cache) + attend + out.
 
     p: {"wq","wk","wv","wo"(,biases)}; x: (B, S, d).
@@ -211,6 +212,11 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
     fused_attn: slot-cache decode only — read attention straight off the
     (possibly INT8) cache via the fused Pallas/jnp kernel instead of
     materializing a full-precision copy for `attend`.
+    slot_chunk: (slot, pos_start, length) traced scalars — CHUNKED PREFILL
+    over a slot cache: x is one slot's prompt chunk (B=1, S=chunk),
+    `positions` its absolute positions; the chunk's K/V are quantized
+    in-kernel and written straight into the slot's rows (no dense prefill
+    cache is assembled). Requires a slot cache, causal, no window.
     Returns (out, new_cache_layer | (k, v) | None).
     """
     B, S, _ = x.shape
@@ -231,9 +237,19 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
     elif _is_slot_cache(cache_layer):
         # engine slot cache: per-request positions (B, 1), quant-aware
         from repro.engine.kvcache import (fused_slot_attention,
+                                          slot_chunk_prefill,
                                           slot_layer_update,
                                           slot_layer_write)
-        if fused_attn and S == 1 and causal and window is None:
+        if slot_chunk is not None:
+            # chunked prefill of ONE slot: fused attention over prior rows
+            # + this chunk, codes scattered into the slot in one pass
+            assert causal and window is None and B == 1, (causal, window, B)
+            slot, pos_start, length = slot_chunk
+            o, new_cache = slot_chunk_prefill(
+                cache_layer, q[0], k[0], v[0], slot, pos_start, length,
+                kv_chunk=kv_chunk)
+            o = o[None]
+        elif fused_attn and S == 1 and causal and window is None:
             # fused decode read: write-only cache update, then dequant-in-
             # kernel attention — no full-precision cache copy exists
             new_cache = slot_layer_write(cache_layer, k, v, positions)

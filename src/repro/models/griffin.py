@@ -284,7 +284,20 @@ def decode_step(params, cfg, cache: GriffinCache, tokens, pos):
                    positions=positions)
 
 
-def prefill(params, cfg, batch, *, kv_chunk=None, **_):
+def prefill(params, cfg, batch, max_len=None, *, kv_chunk=None,
+            pad_mask=None, moe_blocks=1):
     """Prefill from zero state. The returned cache carries the recurrent
-    states and a ring KV cache of the last `window` positions."""
+    states and a ring KV cache of the last `window` positions — so
+    ``max_len`` is satisfied vacuously (a ring never overflows, prompts
+    of any length serve). Kwargs whose silent swallowing would CORRUPT
+    results fail loudly: a pad_mask cannot be honored because the RG-LRU
+    recurrence folds every input token into its state in order."""
+    if pad_mask is not None:
+        raise NotImplementedError(
+            "griffin prefill cannot honor pad_mask: the RG-LRU states "
+            "integrate every token in order, so pad tokens would corrupt "
+            "them — feed unpadded (per-request) prompts instead")
+    if moe_blocks != 1:
+        raise NotImplementedError("griffin has no MoE layers to block "
+                                  f"(moe_blocks={moe_blocks})")
     return forward(params, cfg, batch, kv_chunk=kv_chunk, want_cache=True)

@@ -227,5 +227,22 @@ def decode_step(params, cfg, state: RWKVState, tokens, pos=None):
     return logits, state
 
 
-def prefill(params, cfg, batch, **_):
+def prefill(params, cfg, batch, max_len=None, *, kv_chunk=None,
+            pad_mask=None, moe_blocks=1):
+    """Prefill = one forward from zero state. ``max_len`` is satisfied
+    vacuously — the recurrent cache has no length axis, so there is
+    nothing to pad or overflow (prompts of any length serve) — and
+    ``kv_chunk`` has no KV cache to chunk (a pure perf hint). Kwargs
+    whose silent swallowing would CORRUPT results fail loudly: a
+    pad_mask cannot be honored because the recurrence folds every input
+    token into the state in order — left-pad tokens would poison it."""
+    if pad_mask is not None:
+        raise NotImplementedError(
+            "rwkv6 prefill cannot honor pad_mask: the recurrence "
+            "integrates every token into the state in order, so pad "
+            "tokens would corrupt it — feed unpadded (per-request) "
+            "prompts instead")
+    if moe_blocks != 1:
+        raise NotImplementedError("rwkv6 has no MoE layers to block "
+                                  f"(moe_blocks={moe_blocks})")
     return forward(params, cfg, batch)

@@ -69,14 +69,15 @@ def init(key, cfg):
 def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
                  kv_chunk, want_kv: bool, moe_blocks: int = 1,
                  tshard_decode: bool = False, kv_pos_override=None,
-                 fused_attn: bool = False):
+                 fused_attn: bool = False, slot_chunk=None):
     x = shard_hint(x, "dp", None, None)
     h = apply_norm(x, p["ln1"], cfg.norm_type)
     attn_out, kv = attention_block(
         p["attn"], h, cfg, positions, cache_layer,
         causal=cfg.family != "encoder", window=cfg.window,
         kv_chunk=kv_chunk, want_kv=want_kv, tshard_decode=tshard_decode,
-        kv_pos_override=kv_pos_override, fused_attn=fused_attn)
+        kv_pos_override=kv_pos_override, fused_attn=fused_attn,
+        slot_chunk=slot_chunk)
     x = x + attn_out
     h = apply_norm(x, p["ln2"], cfg.norm_type)
     if moe:
@@ -88,14 +89,14 @@ def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
 
 def _scan_stack(cfg, stacked, x, positions, cache, *, moe, kv_chunk,
                 want_kv, remat, moe_blocks=1, tshard_decode=False,
-                kv_pos_override=None, fused_attn=False):
+                kv_pos_override=None, fused_attn=False, slot_chunk=None):
     """Scan a homogeneous stacked layer group. cache: per-stack KVCache,
     engine SlotKVCache, or None. Returns (x, new_cache_or_kv, aux_sum)."""
     fn = functools.partial(_layer_apply, cfg, moe=moe, kv_chunk=kv_chunk,
                            want_kv=want_kv, moe_blocks=moe_blocks,
                            tshard_decode=tshard_decode,
                            kv_pos_override=kv_pos_override,
-                           fused_attn=fused_attn)
+                           fused_attn=fused_attn, slot_chunk=slot_chunk)
     if remat:
         fn = jax.checkpoint(fn, static_argnums=())
 
@@ -146,13 +147,17 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
             positions=None, *, kv_chunk=None, want_cache=False, remat=False,
             cache_len: Optional[int] = None, moe_blocks: int = 1,
             tshard_decode: bool = False, pad_mask=None,
-            fused_attn: bool = False):
+            fused_attn: bool = False, slot_chunk=None):
     """Returns (logits, new_cache, aux). cache ⇒ decode step (a KVCache, or
     an engine SlotKVCache with per-request positions); want_cache ⇒ prefill
     (assembles a fresh cache from the computed K/V). pad_mask (B, S) marks
     True=padding tokens whose K/V must never be attended to (left- or
     right-padded batched prefill). fused_attn routes slot-cache decode
-    through the fused dequant-in-kernel attention."""
+    through the fused dequant-in-kernel attention. slot_chunk (slot,
+    pos_start, length) + a SlotKVCache ⇒ chunked prefill of one slot:
+    `positions` are the chunk's absolute positions and each layer's K/V is
+    quantized in-kernel and written straight into the slot cache instead
+    of assembling a dense prefill cache."""
     if cache is not None:
         x = embed_lookup(params["embed"], batch["tokens"])     # (B, 1)
     else:
@@ -183,7 +188,7 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               kv_chunk=kv_chunk, want_kv=want_kv, remat=remat,
                               tshard_decode=tshard_decode,
                               kv_pos_override=kv_pos_override,
-                              fused_attn=fused_attn)
+                              fused_attn=fused_attn, slot_chunk=slot_chunk)
         aux += a
         (caches if cache is not None else kvs).append(c)
     if n_moe:
@@ -193,10 +198,16 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               remat=remat, moe_blocks=moe_blocks,
                               tshard_decode=tshard_decode,
                               kv_pos_override=kv_pos_override,
-                              fused_attn=fused_attn)
+                              fused_attn=fused_attn, slot_chunk=slot_chunk)
         aux += a
         (caches if cache is not None else kvs).append(c)
 
+    if slot_chunk is not None:
+        # chunk prefill consumes ONLY the last valid token's logits (the
+        # first-generated-token sample on the prompt's final chunk) —
+        # slice before the head so the vocab projection is (1, 1, V)
+        # instead of (1, Sc, V) per chunk
+        x = jax.lax.dynamic_slice_in_dim(x, slot_chunk[2] - 1, 1, axis=1)
     x = apply_norm(x, params["final_norm"], cfg.norm_type)
     head = params.get("lm_head", None)
     if head is None:
@@ -301,6 +312,32 @@ def decode_step_slots(params, cfg, cache, tokens, pos, *, kv_chunk=None,
                                positions=positions, kv_chunk=kv_chunk,
                                fused_attn=fused)
     return logits, cache
+
+
+def prefill_chunk_slots(params, cfg, cache, tokens, slot, pos_start,
+                        length, *, kv_chunk=None):
+    """CHUNKED prefill of ONE slot straight into the engine slot cache:
+    process a chunk of prompt tokens at absolute positions
+    [pos_start, pos_start + Sc), quantize each layer's K/V in-kernel and
+    scatter the codes into the slot's rows — no dense (L, S, Hkv, D)
+    prefill cache is ever assembled (contrast `prefill` +
+    `engine.kvcache.write_prefill`, the legacy one-shot path).
+
+    tokens: (1, Sc) int32 (right-padded to a chunk bucket); slot /
+    pos_start / length are traced scalars, `length` <= Sc the number of
+    real prompt tokens. Returns (last_logits (1, V), cache) where
+    last_logits is the logits row of the chunk's FINAL valid token — the
+    engine samples the first generated token from it on the prompt's last
+    chunk and ignores it otherwise.
+    """
+    Sc = tokens.shape[1]
+    positions = (jnp.asarray(pos_start, jnp.int32)
+                 + jnp.arange(Sc, dtype=jnp.int32))
+    logits, cache, _ = forward(
+        params, cfg, {"tokens": tokens}, cache=cache, positions=positions,
+        kv_chunk=kv_chunk, slot_chunk=(slot, pos_start, length))
+    return logits[:, 0], cache                 # head already sliced to the
+    # chunk's last valid token (see forward's slot_chunk branch)
 
 
 def prefill(params, cfg, batch, max_len: Optional[int] = None, *,

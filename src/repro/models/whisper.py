@@ -197,7 +197,20 @@ def decode_step(params, cfg, cache: WhisperCache, tokens, pos):
                    positions=positions)
 
 
-def prefill(params, cfg, batch, max_len=None, kv_chunk=None, **_):
+def prefill(params, cfg, batch, max_len=None, *, kv_chunk=None,
+            pad_mask=None, moe_blocks=1):
+    """Prefill the decoder self-cache (+ encoder cross K/V). Kwargs this
+    family cannot honor fail LOUDLY instead of being swallowed: silently
+    ignoring a caller's pad_mask would leave left-pad K/V attendable."""
+    if pad_mask is not None:
+        raise NotImplementedError(
+            "whisper prefill cannot honor pad_mask: WhisperCache keeps no "
+            "per-request KV validity, so left-padded batches would attend "
+            "to pad K/V — serve whisper with unpadded (per-request) "
+            "prompts instead")
+    if moe_blocks != 1:
+        raise NotImplementedError("whisper has no MoE layers to block "
+                                  f"(moe_blocks={moe_blocks})")
     logits, cache = forward(params, cfg, batch, want_cache=True,
                             kv_chunk=kv_chunk)
     if max_len and max_len > batch["tokens"].shape[1]:

@@ -1,0 +1,299 @@
+"""Fused chunked-prefill kernel + engine state machine:
+
+* kernel parity (jnp sweep and Pallas interpret mode) vs the
+  assemble-then-`attend` oracle for fp / int8-dynamic / int8-static,
+  including the decode-parking garbage row the cache mask must exclude;
+* epilogue codes bit-identical to `quantize_kv` / `quantize_kv_static`
+  (chunked and one-shot prefill fill the cache with the same bytes);
+* chunked `prefill_chunk_slots` vs legacy `prefill` + `write_prefill`
+  cache contents;
+* engine-level token-for-token greedy equality (ragged chunk boundaries,
+  chunk sizes 1 / 16 / not-dividing-S) for fp, int8-dynamic and
+  int8-static caches;
+* a slot mid-prefill stays invisible to decode (emits nothing, and a
+  concurrently decoding request's tokens are untouched);
+* the fused chunked path never materializes a dense fp prefill cache
+  (`engine.FP_PREFILL_MATERIALIZATIONS` hook);
+* non-transformer prefill signatures fail loudly on kwargs they cannot
+  honor instead of silently swallowing them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import Engine, EngineConfig
+from repro.engine.kvcache import (dequantize_kv, init_slot_cache,
+                                  quantize_kv, quantize_kv_static,
+                                  write_prefill)
+from repro.kernels.prefill_attention import prefill_attention
+from repro.models import get_model, transformer
+from repro.models.attention import attend
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_case(seed, T=32, Hq=4, Hkv=2, D=16, prior=9, Sq=8):
+    rng = np.random.default_rng(seed)
+    f = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    q = f(Sq, Hq, D)
+    k_new, v_new = f(Sq, Hkv, D), f(Sq, Hkv, D)
+    k_all, v_all = f(T, Hkv, D), f(T, Hkv, D)
+    kv_pos = np.full(T, -1, np.int32)
+    kv_pos[:prior] = np.arange(prior)
+    # the engine's decode ride-along parks mid-prefill slots at their
+    # next-unwritten position: a garbage row marked valid at kv_pos ==
+    # pos_start, which the cache mask (kv_pos < pos_start) must exclude
+    kv_pos[prior] = prior
+    return q, k_new, v_new, k_all, v_all, jnp.asarray(kv_pos), rng
+
+
+def reference(q, kd, vd, k_new, v_new, prior, length, pos_start):
+    """Assemble [dequantized prior rows] + [chunk fp K/V] and run the
+    dense masked `attend` oracle at the chunk's absolute positions."""
+    kf = jnp.concatenate([kd[:prior], k_new[:length]], 0)[None]
+    vf = jnp.concatenate([vd[:prior], v_new[:length]], 0)[None]
+    kp = jnp.arange(prior + length, dtype=jnp.int32)[None]
+    qpos = (pos_start + jnp.arange(q.shape[0], dtype=jnp.int32))[None]
+    return attend(q[None], kf, vf, qpos, kp)[0]
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+@pytest.mark.parametrize("mode", ["fp", "int8-dyn", "int8-static"])
+def test_kernel_parity(mode, use_pallas):
+    C, prior, Sq, length = 4, 9, 8, 5
+    q, k_new, v_new, k_all, v_all, kv_pos, rng = make_case(0)
+    kw = dict(kv_chunk=8, use_pallas=use_pallas, interpret=use_pallas)
+    if mode == "fp":
+        o, aux = prefill_attention(q, k_new, v_new, k_all, v_all, kv_pos,
+                                   prior, length, mode="fp", **kw)
+        kd, vd = k_all, v_all
+        assert aux == ()
+    elif mode == "int8-dyn":
+        qk, ks, kz = quantize_kv(k_all, C)
+        qv, vs, vz = quantize_kv(v_all, C)
+        o, aux = prefill_attention(q, k_new, v_new, qk, qv, kv_pos, prior,
+                                   length, k_scale=ks, k_zero=kz,
+                                   v_scale=vs, v_zero=vz, mode="int8", **kw)
+        kd, vd = dequantize_kv(qk, ks, kz), dequantize_kv(qv, vs, vz)
+        # epilogue codes + scales must be bit-identical to quantize_kv —
+        # the bytes write_prefill would have produced
+        rqk, rks, rkz = quantize_kv(k_new, C)
+        rqv, rvs, rvz = quantize_kv(v_new, C)
+        for got, want in zip(aux, (rqk, rqv, rks, rkz, rvs, rvz)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        ss = jnp.asarray(1.0 + rng.uniform(size=(2, C)).astype(np.float32))
+        zz = jnp.asarray(rng.normal(size=(2, C)).astype(np.float32))
+        qk = quantize_kv_static(k_all, ss, zz)
+        qv = quantize_kv_static(v_all, ss, zz)
+        o, aux = prefill_attention(q, k_new, v_new, qk, qv, kv_pos, prior,
+                                   length, k_scale=ss, k_zero=zz,
+                                   v_scale=ss, v_zero=zz, mode="int8",
+                                   per_entry_scales=False, **kw)
+        kd, vd = dequantize_kv(qk, ss, zz), dequantize_kv(qv, ss, zz)
+        np.testing.assert_array_equal(
+            np.asarray(aux[0]), np.asarray(quantize_kv_static(k_new, ss, zz)))
+        np.testing.assert_array_equal(
+            np.asarray(aux[1]), np.asarray(quantize_kv_static(v_new, ss, zz)))
+    ref = reference(q, kd, vd, k_new, v_new, prior, length, prior)
+    np.testing.assert_allclose(np.asarray(o)[:length],
+                               np.asarray(ref)[:length], atol=2e-4)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_kernel_empty_cache_is_pure_causal_prefill(use_pallas):
+    """pos_start=0 (first chunk of a fresh slot): the whole cache sweep is
+    dead and the result is plain causal self-attention over the chunk."""
+    q, k_new, v_new, k_all, v_all, _, _ = make_case(1)
+    kv_pos = jnp.full(k_all.shape[0], -1, jnp.int32)
+    Sq = q.shape[0]
+    o, _ = prefill_attention(q, k_new, v_new, k_all, v_all, kv_pos, 0, Sq,
+                             mode="fp", kv_chunk=8, use_pallas=use_pallas,
+                             interpret=use_pallas)
+    qpos = jnp.arange(Sq, dtype=jnp.int32)[None]
+    ref = attend(q[None], k_new[None], v_new[None], qpos, qpos[0])[0]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref), atol=2e-4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 30)))
+               for _ in range(6)]
+    return cfg, model, params, prompts
+
+
+@pytest.mark.parametrize("kv_mode", ["fp", "int8"])
+def test_chunk_slots_matches_write_prefill(setup, kv_mode):
+    """`prefill_chunk_slots` loop vs legacy one-shot `prefill` +
+    `write_prefill` on the same slot: identical kv_pos rows, bit-identical
+    layer-0 codes (layer-0 K/V see only embeddings, so chunking cannot
+    perturb them), near-identical cache values at every layer, and the
+    same greedy first token."""
+    cfg, model, params, prompts = setup
+    prompt = prompts[-1][:19]
+    S, T, slot = len(prompt), 48, 1
+    legacy = init_slot_cache(cfg, 2, T, mode=kv_mode)
+    logits, pc = model.prefill(params, cfg,
+                               {"tokens": jnp.asarray(prompt)[None]})
+    legacy = write_prefill(legacy, slot, pc, S)
+    first_legacy = int(jnp.argmax(logits[0, -1]))
+
+    chunked = init_slot_cache(cfg, 2, T, mode=kv_mode)
+    pos, chunk = 0, 8
+    while pos < S:
+        n = min(chunk, S - pos)
+        toks = np.zeros((1, chunk), np.int32)      # right-padded chunk
+        toks[0, :n] = prompt[pos:pos + n]
+        last, chunked = transformer.prefill_chunk_slots(
+            params, cfg, chunked, jnp.asarray(toks), jnp.int32(slot),
+            jnp.int32(pos), jnp.int32(n))
+        pos += n
+    np.testing.assert_array_equal(np.asarray(chunked.kv_pos),
+                                  np.asarray(legacy.kv_pos))
+    np.testing.assert_array_equal(np.asarray(chunked.k[0, slot, :S]),
+                                  np.asarray(legacy.k[0, slot, :S]))
+    if kv_mode == "int8":
+        km_c = dequantize_kv(chunked.k, chunked.k_scale, chunked.k_zero)
+        km_l = dequantize_kv(legacy.k, legacy.k_scale, legacy.k_zero)
+    else:
+        km_c, km_l = chunked.k, legacy.k
+    # later layers see attention over the (quantized) prior instead of the
+    # legacy all-fp prefill — bounded by the INT8 read noise
+    np.testing.assert_allclose(np.asarray(km_c[:, slot, :S]),
+                               np.asarray(km_l[:, slot, :S]), atol=0.05)
+    assert int(jnp.argmax(last[0])) == first_legacy
+
+
+def run_engine(cfg, params, prompts, *, prefill_chunk, kv_mode="int8",
+               scales=None, tokens=4, slots=2, max_len=48):
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=slots, max_len=max_len, max_new_tokens=tokens,
+        prefill_bucket=8, kv_mode=kv_mode, prefill_chunk=prefill_chunk),
+        kv_scales=scales)
+    for p in prompts:
+        eng.submit(p)
+    return [r.out for r in eng.drain()]
+
+
+@pytest.mark.parametrize("kv_mode", ["fp", "int8"])
+@pytest.mark.parametrize("chunk", [1, 16, 7])
+def test_engine_chunked_matches_oneshot(setup, kv_mode, chunk):
+    """Token-for-token greedy equality between chunked fused prefill and
+    the legacy one-shot path, across chunk sizes that divide, exceed, and
+    ragged-split the prompts."""
+    cfg, model, params, prompts = setup
+    base = run_engine(cfg, params, prompts, prefill_chunk=0,
+                      kv_mode=kv_mode)
+    got = run_engine(cfg, params, prompts, prefill_chunk=chunk,
+                     kv_mode=kv_mode)
+    assert got == base
+
+
+def test_chunk_boundaries_are_load_independent(setup):
+    """Chunks are never split to fit leftover step budget, so a request's
+    chunk decomposition — and therefore its exact generation (an int8
+    cache makes boundary placement numerically visible: tokens after a
+    boundary attend the quantized prefix) — is identical whether it
+    prefills alone or under contention."""
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(23)
+    wl = [rng.integers(0, cfg.vocab, size=int(s))
+          for s in (9, 27, 8, 30, 4, 26)]
+    together = run_engine(cfg, params, wl, prefill_chunk=8, tokens=12,
+                          slots=3, max_len=64)
+    solo = [run_engine(cfg, params, [p], prefill_chunk=8, tokens=12,
+                       slots=1, max_len=64)[0] for p in wl]
+    assert together == solo
+
+
+def test_engine_chunked_static_scales(setup):
+    from repro.calib import collect_kv_stats, kv_static_scales
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, 48)) for _ in range(2)]
+    scales = kv_static_scales(collect_kv_stats(cfg, params, calib,
+                                               qchunks=4))
+    base = run_engine(cfg, params, prompts, prefill_chunk=0, scales=scales)
+    got = run_engine(cfg, params, prompts, prefill_chunk=16, scales=scales)
+    assert got == base
+
+
+def test_midprefill_slot_invisible_to_decode(setup):
+    """A slot mid-prefill must not decode (no tokens, not in
+    active_slots), and a concurrently decoding request must generate
+    exactly what it would have generated without the prefilling neighbor."""
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(11)
+    short = rng.integers(0, cfg.vocab, size=4)
+    long = rng.integers(0, cfg.vocab, size=28)
+
+    solo = run_engine(cfg, params, [short], prefill_chunk=4, tokens=10,
+                      max_len=64)[0]
+
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_len=64, max_new_tokens=10, prefill_bucket=8,
+        kv_mode="int8", prefill_chunk=4))
+    eng.submit(short)
+    eng.step()                                 # admit short, 1st chunk
+    eng.step()                                 # short starts decoding
+    uid_long = eng.submit(long)
+    saw_midprefill = 0
+    while not eng.sched.idle:
+        eng.step()
+        pre = eng.sched.prefill_slots()
+        for slot in pre:
+            req = eng.sched.slots[slot]
+            if req.uid == uid_long:
+                saw_midprefill += 1
+                assert req.out == []           # emits nothing mid-prefill
+                assert slot not in eng.sched.active_slots()
+    # the 28-token prompt at 4 tokens/step must have spent >= 6 steps
+    # mid-prefill while the short request was decoding
+    assert saw_midprefill >= 6
+    fin = {r.uid: r.out for r in eng.sched.finished}
+    assert fin[0] == solo                      # short request undisturbed
+    assert len(fin[uid_long]) == 10            # long request completes
+
+
+def test_chunked_path_never_materializes_fp_prefill_cache(setup):
+    """Acceptance hook: the fused chunked path allocates no dense
+    (L, S, Hkv, D) fp prefill cache; the legacy path does, once per
+    admission."""
+    import repro.engine.engine as eng_mod
+    cfg, model, params, prompts = setup
+    before = eng_mod.FP_PREFILL_MATERIALIZATIONS
+    run_engine(cfg, params, prompts[:3], prefill_chunk=8)
+    assert eng_mod.FP_PREFILL_MATERIALIZATIONS == before
+    run_engine(cfg, params, prompts[:3], prefill_chunk=0)
+    assert eng_mod.FP_PREFILL_MATERIALIZATIONS == before + 3
+
+
+def test_engine_defaults_fused():
+    """ROADMAP flip: decode defaults to the fused dequant-in-kernel read;
+    the materializing path stays reachable as the explicit oracle."""
+    assert EngineConfig().fused_attn is True
+    assert EngineConfig(fused_attn=False).fused_attn is False
+
+
+# ---------------------------------------- loud non-transformer prefill ---
+def test_prefill_kwargs_fail_loudly():
+    """whisper/rwkv6/griffin prefill must raise on kwargs they cannot
+    honor instead of silently swallowing them (the old `**_` signatures
+    dropped a caller's pad_mask on the floor — corrupted left-pad
+    handling instead of failing)."""
+    from repro.models import griffin, rwkv6, whisper
+    toks = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    pad = jnp.ones((2, 4), bool)
+    for mod in (whisper, rwkv6, griffin):
+        with pytest.raises(NotImplementedError, match="pad_mask"):
+            mod.prefill(None, None, toks, pad_mask=pad)
+        with pytest.raises(NotImplementedError, match="MoE"):
+            mod.prefill(None, None, toks, moe_blocks=4)
