@@ -21,6 +21,26 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 
+def provenance(seed=None) -> dict:
+    """Shared provenance header for every BENCH_*.json artifact (one
+    definition — serve/calib/spec benches all embed this) so cross-run
+    comparisons of tracked numbers are interpretable: a tokens/s delta
+    means nothing without knowing the jax version and device kind that
+    produced each side."""
+    import platform
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "seed": seed,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
 def bench_table1():
     from table1 import run_table1
     t0 = time.perf_counter()

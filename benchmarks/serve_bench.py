@@ -37,9 +37,12 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
+
+from run import provenance  # noqa: E402
 
 from repro.configs import get_arch  # noqa: E402
 from repro.engine import Engine, EngineConfig  # noqa: E402
@@ -166,8 +169,13 @@ def main():
 
     scfg = ServeConfig(max_batch=args.slots, max_new_tokens=64,
                        max_len=args.max_len)
+    # prefill_chunk pinned to 0 (one-shot): the engine default flipped to
+    # chunked, but this bench's tracked engine-vs-wave and fused-vs-
+    # materialized numbers are decode-path comparisons whose prefill
+    # treatment must stay fixed across PRs — the soak below measures the
+    # chunked-vs-oneshot delta explicitly
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
-                        prefill_bucket=16)
+                        prefill_bucket=16, prefill_chunk=0)
 
     # fused_attn defaults ON now — the materialized read is the explicit
     # oracle config, the fused one is the engine default
@@ -248,6 +256,7 @@ def main():
         }
 
     result = {
+        "provenance": provenance(seed=7),
         "arch": cfg.name,
         "requests": len(workload),
         "slots": args.slots,

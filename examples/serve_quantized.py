@@ -34,10 +34,18 @@ def main():
                          "cache (dequant-in-kernel, no full-precision "
                          "cache copy). Default ON; --no-fused-attn "
                          "selects the legacy materializing oracle")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
+    ap.add_argument("--prefill-chunk", type=int,
+                    default=EngineConfig.prefill_chunk,
                     help="chunked fused prefill: at most this many prompt "
                          "tokens per engine step, K/V quantized in-kernel "
-                         "straight into the slot cache (0 = one-shot)")
+                         "straight into the slot cache (default ON — the "
+                         "engine default; 0 = one-shot opt-out)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: serve the fp32 "
+                         "target with its own SplitQuant low-bit copy as "
+                         "the DRAFT — up to k proposed tokens per slot "
+                         "per step, verified in one fused pass; output "
+                         "stays token-identical to plain greedy")
     ap.add_argument("--recipe", default=None,
                     help="serve from a calibration recipe dir (see "
                          "`python -m repro.launch.serve --save-recipe`): "
@@ -57,19 +65,40 @@ def main():
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10))
                for _ in range(args.requests)]
 
-    def generate(p, label, kv_scales=None):
-        eng = Engine(cfg, p, ecfg, kv_scales=kv_scales)
+    def generate(p, label, kv_scales=None, ecfg=ecfg, draft=None):
+        eng = Engine(cfg, p, ecfg, kv_scales=kv_scales, draft_params=draft)
         for pr in prompts:
             eng.submit(pr.copy())
         out = eng.drain()
         m = eng.metrics()
+        spec = ""
+        if ecfg.spec_k and m["acceptance_rate"] is not None:
+            spec = (f", spec k={ecfg.spec_k} acceptance "
+                    f"{m['acceptance_rate']:.1%}")
         print(f"-- {label}  ({m['tokens_per_s']:.1f} tok/s, "
-              f"kv={m['kv_mode']}{'/static' if m['kv_static_scales'] else ''})")
+              f"kv={m['kv_mode']}"
+              f"{'/static' if m['kv_static_scales'] else ''}{spec})")
         for r in out[:3]:
             print(f"   req {r.uid}: {r.out}")
         return [tuple(r.out) for r in out]
 
     ref = generate(params, "fp32")
+
+    if args.spec_k:
+        # the paper's faithfulness property cashed in for decode wall
+        # clock: the SplitQuant low-bit copy of the SAME weights drafts
+        # for the fp32 target; the lossless accept rule keeps the output
+        # token-identical to the plain fp32 serve above
+        import dataclasses
+        dqp, drep = quantize_tree(key, params, QuantPolicy(
+            cfg=QuantConfig(bits=args.bits), method="splitquant"))
+        secfg = dataclasses.replace(ecfg, spec_k=args.spec_k)
+        outs = generate(params, f"fp32 + INT{args.bits} splitquant draft "
+                        f"({drep['deployed_bytes']/2**20:.1f} MiB)",
+                        ecfg=secfg, draft=dqp)
+        match = np.mean([np.mean([a == b for a, b in zip(o, r)])
+                         for o, r in zip(outs, ref)])
+        print(f"   speculative == plain greedy: {match:.1%}")
 
     if args.recipe:
         # calibrated path: weights restore pre-quantized (no k-means) and

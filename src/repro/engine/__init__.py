@@ -8,16 +8,20 @@ from __future__ import annotations
 
 from .kvcache import (SlotKVCache, clear_slot, dequantize_kv,
                       init_slot_cache, quantize_kv, quantize_kv_static,
-                      write_prefill)
+                      rollback_slot, write_prefill)
 from .scheduler import EngineRequest, Scheduler
 
 __all__ = ["Engine", "EngineConfig", "EngineRequest", "Scheduler",
-           "SlotKVCache", "init_slot_cache", "write_prefill", "clear_slot",
-           "quantize_kv", "quantize_kv_static", "dequantize_kv"]
+           "SlotKVCache", "SpecDecoder", "init_slot_cache", "write_prefill",
+           "clear_slot", "rollback_slot", "quantize_kv",
+           "quantize_kv_static", "dequantize_kv"]
 
 
 def __getattr__(name):
     if name in ("Engine", "EngineConfig"):
         from . import engine as _engine
         return getattr(_engine, name)
+    if name == "SpecDecoder":
+        from . import spec as _spec
+        return _spec.SpecDecoder
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,6 +28,13 @@ parked at their next-unwritten position: the parked step writes garbage
 K/V at exactly the row the slot's NEXT prefill chunk overwrites (and the
 chunk kernel masks cache rows at >= pos_start), so the parked write can
 never leak into any attention result.
+
+With ``spec_k > 0`` the decode step is SPECULATIVE (`engine/spec.py`,
+DESIGN.md §9): a low-bit draft model proposes up to k greedy tokens per
+slot over its own slot cache, the target verifies each slot's window in
+one fused prefill-kernel pass, and 1..k+1 tokens commit per slot per
+step — token-identical to plain greedy decoding by the lossless accept
+rule.
 """
 from __future__ import annotations
 
@@ -42,7 +49,8 @@ import numpy as np
 
 from repro.models import get_model
 
-from .kvcache import clear_slot, init_slot_cache, write_prefill
+from .kvcache import clear_slot, init_slot_cache, rollback_slot, \
+    write_prefill
 from .scheduler import EngineRequest, Scheduler
 
 ENGINE_FAMILIES = ("dense", "moe", "vlm")
@@ -124,6 +132,7 @@ def _jitted_chunk_prefill(cfg):
 # its buffers are donated (in-place row writes)
 _WRITE = jax.jit(write_prefill, donate_argnums=(0,))
 _CLEAR = jax.jit(clear_slot, donate_argnums=(0,))
+_ROLLBACK = jax.jit(rollback_slot, donate_argnums=(0,))
 
 
 @dataclasses.dataclass
@@ -142,12 +151,43 @@ class EngineConfig:
                                         # precision cache copy). False =
                                         # legacy materialize-then-attend,
                                         # kept as the cross-checked oracle
-    prefill_chunk: int = 0              # >0: chunked fused prefill — admit
-                                        # at most this many prompt tokens
-                                        # per step, quantize-in-kernel slot
+    prefill_chunk: int = 96             # chunked fused prefill — admit at
+                                        # most this many prompt tokens per
+                                        # step, quantize-in-kernel slot
                                         # writes, decode keeps running while
-                                        # long prompts stream in. 0 = legacy
-                                        # one-shot prefill + write_prefill
+                                        # long prompts stream in. Default ON
+                                        # (~4x prefill_bucket, the serve-
+                                        # bench soak sweet spot) now that
+                                        # soak + verify coverage has
+                                        # accumulated; prefill_chunk=0 is
+                                        # the legacy one-shot opt-out
+                                        # (serve_bench pins it for its
+                                        # stall baseline)
+    spec_k: int = 0                     # >0: self-speculative decoding — a
+                                        # low-bit draft proposes up to k
+                                        # greedy tokens per slot per step,
+                                        # the target verifies the window in
+                                        # ONE fused pass (engine/spec.py,
+                                        # DESIGN.md §9). Output is token-
+                                        # identical to spec_k=0 greedy.
+                                        # Requires temperature <= 0
+    draft_recipe: Optional[str] = None  # QuantRecipe dir the draft weights
+                                        # are minted from (spec_k > 0);
+                                        # None = draft with the target's
+                                        # own weights (acceptance ~1, no
+                                        # draft cost win — mostly a test
+                                        # and bring-up configuration)
+    draft_dequantize: bool = True       # expand the draft's packed low-
+                                        # bit weights to the compute dtype
+                                        # ONCE at engine start: the low-
+                                        # bit recipe buys draft
+                                        # faithfulness + storage, and a
+                                        # packed draft would otherwise pay
+                                        # a full dequant per draft step on
+                                        # backends without the fused
+                                        # dequant-matmul. False keeps the
+                                        # draft packed (memory-bound
+                                        # deployments with the kernel)
 
 
 class Engine:
@@ -158,17 +198,27 @@ class Engine:
     ``k_scale/k_zero/v_scale/v_zero`` (L, Hkv, C) arrays. Requires
     ``kv_mode="int8"``; decode writes then skip the per-step min/max
     reduce and scale storage amortizes to ~0 bytes/token (DESIGN.md §7).
+
+    ``draft_params``: optional pre-built draft weight tree for
+    ``spec_k > 0`` (same architecture as ``params`` — typically the
+    low-bit quantized copy). Overrides ``ecfg.draft_recipe``; when both
+    are absent the target drafts for itself (acceptance ~1, no draft
+    cost win — a bring-up configuration).
     """
 
     def __init__(self, cfg, params, ecfg: EngineConfig,
                  rng: Optional[jax.Array] = None,
                  clock=time.perf_counter,
-                 kv_scales: Optional[dict] = None):
+                 kv_scales: Optional[dict] = None,
+                 draft_params=None):
         if cfg.family not in ENGINE_FAMILIES:
             raise NotImplementedError(
                 f"engine serves transformer families {ENGINE_FAMILIES}, "
                 f"got {cfg.family!r} (recurrent-state continuous batching "
-                f"is a separate cache layout)")
+                f"is a separate cache layout"
+                + (" — and spec_k > 0 additionally needs positional KV "
+                   "rollback, which recurrent state cannot provide)"
+                   if ecfg.spec_k else ")"))
         if cfg.window is not None and cfg.window < ecfg.max_len:
             raise NotImplementedError(
                 "windowed (ring) slot caches not wired up yet; "
@@ -192,6 +242,23 @@ class Engine:
                                if ecfg.prefill_chunk else None)
         self._write = _WRITE
         self._clear = _CLEAR
+        # --- self-speculative decoding (engine/spec.py, DESIGN.md §9) ---
+        self._spec = None
+        if ecfg.spec_k:
+            if not self._greedy:
+                raise NotImplementedError(
+                    "spec_k > 0 requires greedy decoding (temperature <= "
+                    "0): the lossless accept rule compares argmax tokens; "
+                    "temperature sampling needs speculative rejection "
+                    "sampling, which is not wired up")
+            from . import spec as spec_mod
+            if draft_params is None:
+                draft_params = (
+                    spec_mod.load_draft_params(ecfg.draft_recipe, params,
+                                               cfg)
+                    if ecfg.draft_recipe else params)
+            self._spec = spec_mod.SpecDecoder(cfg, ecfg, draft_params)
+            self._verify = spec_mod.jitted_verify(cfg)
         # host-side slot state
         N = ecfg.n_slots
         self._last_tok = np.zeros(N, np.int32)
@@ -201,7 +268,14 @@ class Engine:
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_prefill_chunks = 0
+        self.n_spec_steps = 0
+        self.n_verify_calls = 0
+        self.n_verify_tokens = 0
+        self.n_spec_commit_tokens = 0   # tokens actually appended by spec
+                                        # steps (eos/budget truncation can
+                                        # commit fewer than accepted+1)
         self.decode_step_s: list[float] = []
+        self.spec_step_s: list[float] = []
         # full step() wall + prompt tokens prefilled + decoders already
         # mid-generation at step start: the admission-stall telemetry
         # (serve_bench's soak reports the p95 of step latency among steps
@@ -259,9 +333,12 @@ class Engine:
     def _retire(self, slot: int):
         """Free the slot everywhere: scheduler, cache row (kv_pos → -1),
         and host-side position/token state, so idle slots genuinely ride
-        along at pos 0."""
+        along at pos 0. A speculative engine clears the draft's mirror
+        row too."""
         self.sched.retire(slot)
         self.cache = self._clear(self.cache, jnp.int32(slot))
+        if self._spec is not None:
+            self._spec.clear(slot)
         self._pos[slot] = 0
         self._last_tok[slot] = 0
 
@@ -300,6 +377,11 @@ class Engine:
         # only [0, S) becomes visible; bucket padding stays masked forever
         self.cache = self._write(self.cache, jnp.int32(slot), pcache,
                                  jnp.int32(S))
+        if self._spec is not None:
+            # mirror the prompt into the draft cache (its own one-shot
+            # dense materialization — count it honestly)
+            self._spec.prefill_oneshot(jnp.asarray(toks), slot, S)
+            FP_PREFILL_MATERIALIZATIONS += 1
         self._start_decoding(slot, req, logits[0, S - 1], S)
         return S
 
@@ -352,6 +434,8 @@ class Engine:
             logits, self.cache = self._chunk_prefill(
                 self.params, self.cache, jnp.asarray(toks), jnp.int32(slot),
                 jnp.int32(done), jnp.int32(n))
+            if self._spec is not None:     # mirror the chunk to the draft
+                self._spec.prefill_chunk(jnp.asarray(toks), slot, done, n)
             self.n_prefill_chunks += 1
             budget -= n
             spent += n
@@ -362,6 +446,76 @@ class Engine:
                 self.sched.finish_prefill(slot)
                 self._start_decoding(slot, req, logits[0], S)
         return spent
+
+    # ------------------------------------------- speculative decoding --
+    def _spec_step(self, active: list[int]) -> None:
+        """One SPECULATIVE decode step (DESIGN.md §9): the low-bit draft
+        proposes up to `spec_k` greedy tokens per active slot in batched
+        decode steps over its own cache, then the target scores each
+        slot's whole window in ONE fused verify pass and commits the
+        longest matching draft prefix plus its own correction token —
+        between 1 and spec_k+1 tokens per slot per step, always exactly
+        the tokens plain greedy decoding would have produced.
+
+        Windows are per-slot (`w = min(spec_k+1, cache headroom,
+        remaining budget)`), so budget-capped slots degrade to w=1 —
+        an ordinary decode step expressed through the verify path — and
+        spec/non-spec slots mix freely in one step. Verify writes the
+        window's K/V codes in-kernel; rejected rows are undone by
+        `rollback_slot` on both caches (kv_pos → -1 is the whole
+        rollback), leaving slot bytes bit-identical to a never-speculated
+        engine once overwritten."""
+        k = self.ecfg.spec_k
+        Sq = k + 1
+        N = self.ecfg.n_slots
+        pos0 = self._pos.copy()
+        t0 = self.clock()
+        # per-slot window lengths: 0 parks the slot through the draft
+        # pass (idle / mid-prefill), w >= 1 for decoding slots
+        w = np.zeros(N, np.int64)
+        for s in active:
+            req = self.sched.slots[s]
+            rem = req.max_new_tokens - len(req.out)
+            w[s] = max(1, min(Sq, self.ecfg.max_len - int(pos0[s]), rem))
+        drafts = self._spec.draft(self._last_tok, pos0, w)     # (k, N)
+        from .spec import accept_length
+        for s in active:
+            req = self.sched.slots[s]
+            ws = int(w[s])
+            toks = np.zeros((1, Sq), np.int32)
+            toks[0, 0] = self._last_tok[s]
+            toks[0, 1:ws] = drafts[:ws - 1, s]
+            garg, self.cache = self._verify(
+                self.params, self.cache, jnp.asarray(toks), jnp.int32(s),
+                jnp.int32(pos0[s]), jnp.int32(ws))
+            garg = np.asarray(garg)            # (Sq,) target argmax rows
+            self.n_verify_calls += 1
+            self.n_verify_tokens += ws
+            a = accept_length(drafts[:, s], garg, ws)
+            self.sched.note_spec(s, proposed=ws - 1, accepted=a)
+            new_pos = int(pos0[s]) + a + 1
+            if a + 1 < ws:                     # rejected rows to undo
+                self.cache = _ROLLBACK(self.cache, jnp.int32(s),
+                                       jnp.int32(new_pos))
+            if new_pos < int(pos0[s]) + int(w[s]):
+                self._spec.rollback(s, new_pos)
+            # commit g_1..g_{a+1} with the same eos/budget/max_len
+            # semantics as sequential decode steps
+            for t in (int(x) for x in garg[:a + 1]):
+                if t == self.ecfg.eos_id:      # eos is never emitted
+                    self._retire(s)
+                    break
+                req.out.append(t)
+                self.n_spec_commit_tokens += 1
+                self._last_tok[s] = t
+                self._pos[s] += 1
+                if (len(req.out) >= req.max_new_tokens
+                        or self._pos[s] >= self.ecfg.max_len):
+                    self._retire(s)
+                    break
+        self.n_spec_steps += 1
+        self.spec_step_s.append(self.clock() - t0)
+        self.sched.note_step(len(active))
 
     def step(self) -> list[EngineRequest]:
         """Admit + (chunk-budgeted) prefill + one batched decode step.
@@ -393,7 +547,13 @@ class Engine:
                     self.sched.prefill_slots():
                 prefill_tokens += self._prefill_work()
         active = self.sched.active_slots()
-        if active:
+        if active and self._spec is not None:
+            # speculative step: draft k tokens batched over the draft
+            # cache, verify each slot's window in one fused pass, commit
+            # 1..spec_k+1 tokens per slot (token-identical to the plain
+            # decode branch below)
+            self._spec_step(active)
+        elif active:
             # idle slots ride along at pos 0 with token 0 (fixed decode
             # shape == jit cache of exactly one entry); _retire cleared
             # their kv_pos rows, so each idle step re-marks only its own
@@ -459,6 +619,36 @@ class Engine:
 
         def p(a, q):
             return float(np.percentile(a, q)) if a.size else None
+        spec = {}
+        if self.ecfg.spec_k:
+            hist = np.bincount(np.asarray(self.sched.accept_hist,
+                                          np.int64),
+                               minlength=self.ecfg.spec_k + 1) \
+                if self.sched.accept_hist else np.zeros(0, np.int64)
+            sstep = np.asarray(self.spec_step_s, np.float64)
+            spec = {
+                "spec_k": self.ecfg.spec_k,
+                "spec_steps": self.n_spec_steps,
+                "verify_calls": self.n_verify_calls,
+                "verify_tokens": self.n_verify_tokens,
+                "draft_steps": (self._spec.n_draft_steps
+                                if self._spec else 0),
+                "draft_proposed": self.sched.spec_proposed,
+                "draft_accepted": self.sched.spec_accepted,
+                "acceptance_rate": self.sched.acceptance_rate(),
+                # accept_hist[a] = verify calls that accepted exactly a
+                # draft tokens (a in [0, spec_k])
+                "accept_hist": hist.tolist(),
+                # tokens actually COMMITTED per verify (eos/budget can
+                # truncate below accepted+1, so this is computed from
+                # appended tokens, not from the accept histogram)
+                "tokens_per_verify_mean": (
+                    self.n_spec_commit_tokens / self.n_verify_calls
+                    if self.n_verify_calls else None),
+                "spec_step_p50_s": p(sstep, 50),
+                "spec_step_p95_s": p(sstep, 95),
+                "spec_by_slot": [list(x) for x in self.sched.spec_by_slot],
+            }
         return {
             "n_finished": len(fin),
             "total_tokens": total_tokens,
@@ -490,4 +680,5 @@ class Engine:
             "kv_mode": self.cache.mode,
             "kv_static_scales": self.cache.static,
             "kv_bytes_per_token": self.cache.bytes_per_token(),
+            **spec,
         }

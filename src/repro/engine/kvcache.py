@@ -284,7 +284,7 @@ def fused_slot_attention(cl: SlotKVCache, q, q_pos, *, use_pallas=None,
 
 def slot_chunk_prefill(cl: SlotKVCache, q, k_new, v_new, slot, pos_start,
                        length, *, kv_chunk=None, use_pallas=None,
-                       interpret: bool = False):
+                       interpret: bool = False, verify: bool = False):
     """One CHUNKED-PREFILL step for ONE layer and ONE slot: fused causal
     attention of the chunk's queries over [the slot's already-written
     rows] + [the chunk's own fp K/V], with the chunk quantized in-kernel
@@ -298,6 +298,13 @@ def slot_chunk_prefill(cl: SlotKVCache, q, k_new, v_new, slot, pos_start,
     become visible (`kv_pos` = absolute position; the padded tail is
     re-marked -1, which is a no-op on rows the next chunk will overwrite
     and drops rows past max_len). Returns (o (Sq, Hq, D), new_cl).
+
+    ``verify``: speculative-verify scoring (DESIGN.md §9) — the chunk is
+    a DRAFT WINDOW and must attend its own K/V through the storage
+    round-trip so every row's logits match a plain decode step of that
+    token; the codes scattered into the slot are identical either way
+    (accepted rows land as final slot bytes, rejected rows are undone by
+    `rollback_slot`).
     """
     from repro.kernels.prefill_attention import prefill_attention
 
@@ -305,7 +312,8 @@ def slot_chunk_prefill(cl: SlotKVCache, q, k_new, v_new, slot, pos_start,
     take = functools.partial(jax.lax.dynamic_index_in_dim, index=slot,
                              axis=0, keepdims=False)
     ck, cv, kpos = take(cl.k), take(cl.v), take(cl.kv_pos)
-    kw = dict(kv_chunk=kv_chunk, use_pallas=use_pallas, interpret=interpret)
+    kw = dict(kv_chunk=kv_chunk, use_pallas=use_pallas, interpret=interpret,
+              verify=verify)
     if cl.mode == "int8" and cl.static:
         o, (qk, qv) = prefill_attention(
             q, k_new, v_new, ck, cv, kpos, pos_start, length,
@@ -425,6 +433,28 @@ def clear_slot(cache: SlotKVCache, slot: int) -> SlotKVCache:
     return dataclasses.replace(
         cache, kv_pos=jax.lax.dynamic_update_slice(
             cache.kv_pos, row[:, None], (0, slot, 0)))
+
+
+def rollback_slot(cache: SlotKVCache, slot: int, accept_len: int
+                  ) -> SlotKVCache:
+    """Undo speculative writes past the accepted point: after this call
+    the slot's valid content is exactly positions [0, accept_len).
+
+    Validity-by-position makes this the WHOLE rollback (DESIGN.md §9):
+    every read path masks rows by ``kv_pos``, so flipping the rejected
+    rows to -1 removes them from all attention, and the codes/scales left
+    behind are indistinguishable from the stale bytes any retired slot
+    leaves — the next write at those positions overwrites them, which is
+    why a rolled-back slot re-decoded over the accepted prefix is
+    bit-identical to a slot that never speculated (hypothesis property in
+    tests/test_spec.py). ``slot`` / ``accept_len`` may be traced scalars.
+    """
+    L, _, T = cache.kv_pos.shape
+    row = jax.lax.dynamic_slice(cache.kv_pos, (0, slot, 0), (L, 1, T))
+    row = jnp.where(row >= accept_len, jnp.int32(-1), row)
+    return dataclasses.replace(
+        cache, kv_pos=jax.lax.dynamic_update_slice(
+            cache.kv_pos, row, (0, slot, 0)))
 
 
 def slice_layers(cache: SlotKVCache, lo: int, hi: int) -> SlotKVCache:

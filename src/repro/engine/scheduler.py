@@ -62,6 +62,15 @@ class Scheduler:
         self.n_submitted = 0
         self.n_admitted = 0
         self.queue_depth_hist: list[int] = []
+        # speculative-decoding accounting (spec_k > 0 engines): totals,
+        # the per-verify accepted-length histogram, and per-slot
+        # [proposed, accepted] pairs — mixed spec/non-spec steps mean
+        # slots verify different window lengths in the same step, so the
+        # rate must be tracked per verify call, not per step
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.accept_hist: list[int] = []
+        self.spec_by_slot: list[list[int]] = [[0, 0] for _ in range(n_slots)]
 
     # ------------------------------------------------------------ intake --
     def submit(self, req: EngineRequest) -> EngineRequest:
@@ -136,3 +145,20 @@ class Scheduler:
         if not hasattr(self, "_active_hist"):
             self._active_hist = []
         self._active_hist.append(n_active)
+
+    # ------------------------------------------- speculative decoding --
+    def note_spec(self, slot: int, proposed: int, accepted: int):
+        """Record one verify call's outcome: `proposed` draft tokens were
+        scored for `slot`, the first `accepted` matched the target."""
+        assert 0 <= accepted <= proposed, (slot, proposed, accepted)
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
+        self.accept_hist.append(accepted)
+        self.spec_by_slot[slot][0] += proposed
+        self.spec_by_slot[slot][1] += accepted
+
+    def acceptance_rate(self) -> Optional[float]:
+        """Fraction of proposed draft tokens the target accepted."""
+        if not self.spec_proposed:
+            return None
+        return self.spec_accepted / self.spec_proposed

@@ -57,6 +57,21 @@ The same math ships as a pure-jnp chunked sweep (`use_pallas=False`, the
 CPU lowering, `lax.cond` dead-chunk skip) and the kernel runs under
 `interpret=True` as the reference fallback in tests
 (`tests/test_prefill_attention.py`).
+
+Speculative VERIFY mode (``verify=True``, DESIGN.md §9): the same kernel
+doubles as the multi-token scorer of the self-speculative decoder — a
+draft window *is* a prefill chunk. The one difference is what the final
+iteration attends: plain prefill attends the chunk's own K/V at full
+precision (matching the legacy one-shot prefill, where the whole prompt
+is scored in fp), but a verify window must reproduce PLAIN DECODE, and a
+decode step writes its quantized K/V first and then attends the cache —
+i.e. every token sees itself and its in-window predecessors through the
+quantization round-trip. Verify mode therefore quantizes the window K/V
+*first* (the identical arithmetic the epilogue stores) and attends the
+dequantized codes under the intra-chunk causal mask; for a float cache
+it round-trips through the cache dtype. Without this, int8 verify logits
+would see fp intra-window K/V that plain decode never sees, and the
+accept rule's token-identity guarantee would quietly break.
 """
 from __future__ import annotations
 
@@ -109,7 +124,8 @@ def _dequant_cols(codes, scale_col, zero_col):
 # ------------------------------------------------------------- kernel ---
 def _prefill_kernel(info_ref, q_ref, kpos_ref, ck_ref, cv_ref, kn_ref,
                     vn_ref, *rest, mode: str, per_entry: bool,
-                    n_cache_chunks: int, groups: int, qchunks: int):
+                    n_cache_chunks: int, groups: int, qchunks: int,
+                    verify: bool):
     if mode == "int8" and per_entry:
         (ks_ref, kz_ref, vs_ref, vz_ref, o_ref, qk_ref, qv_ref, oks_ref,
          okz_ref, ovs_ref, ovz_ref, m_ref, l_ref, acc_ref) = rest
@@ -179,8 +195,29 @@ def _prefill_kernel(info_ref, q_ref, kpos_ref, ck_ref, cv_ref, kn_ref,
         qidx = i * Bq + jax.lax.broadcasted_iota(jnp.int32, (Bq, Sq), 0)
         cidx = jax.lax.broadcasted_iota(jnp.int32, (Bq, Sq), 1)
         valid = (cidx <= qidx) & (cidx < length)           # (Bq, Sq) causal
-        online_update(kn_ref[...].astype(jnp.float32),
-                      vn_ref[...].astype(jnp.float32), valid)
+        kn = kn_ref[...].astype(jnp.float32)
+        vn = vn_ref[...].astype(jnp.float32)
+        if verify:
+            # speculative verify: attend the window's own K/V through the
+            # SAME storage round-trip a decode-step write applies (codes
+            # are what a plain-decode successor would have attended), so
+            # the accept rule compares against plain-decode logits
+            if mode == "int8" and per_entry:
+                q8, s, z = _dyn_quantize(kn_ref[...], qchunks)
+                kn = _dequant_chunk(q8, s, z)
+                q8, s, z = _dyn_quantize(vn_ref[...], qchunks)
+                vn = _dequant_chunk(q8, s, z)
+            elif mode == "int8":
+                kn = _dequant_cols(_static_quantize_cols(
+                    kn_ref[...], ksc_ref[...], kzc_ref[...]),
+                    ksc_ref[...], kzc_ref[...])
+                vn = _dequant_cols(_static_quantize_cols(
+                    vn_ref[...], vsc_ref[...], vzc_ref[...]),
+                    vsc_ref[...], vzc_ref[...])
+            else:
+                kn = kn_ref[...].astype(ck_ref.dtype).astype(jnp.float32)
+                vn = vn_ref[...].astype(cv_ref.dtype).astype(jnp.float32)
+        online_update(kn, vn, valid)
         l = l_ref[...]
         o = jnp.where(l[..., None] > 0,
                       acc_ref[...] / jnp.maximum(l, 1e-30)[..., None], 0.0)
@@ -210,7 +247,7 @@ def _prefill_kernel(info_ref, q_ref, kpos_ref, ck_ref, cv_ref, kn_ref,
 
 def _prefill_attention_pallas(q, k_new, v_new, cache_k, cache_v, kv_pos,
                               pos_start, length, scales, *, mode, per_entry,
-                              kv_chunk, q_block, interpret):
+                              kv_chunk, q_block, interpret, verify=False):
     Sq, Hq, D = q.shape
     T, Hkv = cache_k.shape[0], cache_k.shape[1]
     Tc = _pick_kv_chunk(T, kv_chunk)
@@ -258,7 +295,7 @@ def _prefill_attention_pallas(q, k_new, v_new, cache_k, cache_v, kv_pos,
             out_shape += [jax.ShapeDtypeStruct((Sq, Hkv, D), jnp.int8)] * 2
     kernel = functools.partial(
         _prefill_kernel, mode=mode, per_entry=per_entry, n_cache_chunks=nc,
-        groups=G, qchunks=qchunks)
+        groups=G, qchunks=qchunks, verify=verify)
     outs = pl.pallas_call(
         kernel,
         grid=(nq, nc + 1),
@@ -278,7 +315,7 @@ def _prefill_attention_pallas(q, k_new, v_new, cache_k, cache_v, kv_pos,
 # ------------------------------------------------- jnp chunked lowering ---
 def _prefill_attention_jnp(q, k_new, v_new, cache_k, cache_v, kv_pos,
                            pos_start, length, scales, *, mode, per_entry,
-                           kv_chunk):
+                           kv_chunk, verify=False):
     """Same online-softmax sweep in pure jnp — the CPU path. `lax.cond`
     skips cache chunks with no valid entry (lazy `dynamic_slice` inside
     the branch, so skipped codes never move), then a final step attends
@@ -341,8 +378,26 @@ def _prefill_attention_jnp(q, k_new, v_new, cache_k, cache_v, kv_pos,
     qidx = jnp.arange(Sq, dtype=jnp.int32)
     cidx = jnp.arange(Sq, dtype=jnp.int32)
     valid = (cidx[None, :] <= qidx[:, None]) & (cidx[None, :] < length)
-    m, l, acc = update(carry, k_new.astype(jnp.float32),
-                       v_new.astype(jnp.float32), valid)
+    kn = k_new.astype(jnp.float32)
+    vn = v_new.astype(jnp.float32)
+    if verify:
+        # same storage round-trip as the Pallas verify branch: the window
+        # attends itself exactly as a plain decode step would (quantized
+        # codes for int8 caches, cache-dtype cast for float caches)
+        if mode == "int8" and per_entry:
+            q8, s, z = _dyn_quantize(k_new, scales[0].shape[-1])
+            kn = _dequant_chunk(q8, s, z)
+            q8, s, z = _dyn_quantize(v_new, scales[0].shape[-1])
+            vn = _dequant_chunk(q8, s, z)
+        elif mode == "int8":
+            kn = _dequant_cols(_static_quantize_cols(
+                k_new, scales[0], scales[1]), scales[0], scales[1])
+            vn = _dequant_cols(_static_quantize_cols(
+                v_new, scales[2], scales[3]), scales[2], scales[3])
+        else:
+            kn = k_new.astype(cache_k.dtype).astype(jnp.float32)
+            vn = v_new.astype(cache_v.dtype).astype(jnp.float32)
+    m, l, acc = update(carry, kn, vn, valid)
     o = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None],
                   0.0)
     return o.reshape(Sq, Hq, D).astype(q.dtype)
@@ -354,7 +409,7 @@ def prefill_attention(q, k_new, v_new, cache_k, cache_v, kv_pos, pos_start,
                       v_zero=None, mode: str = "fp",
                       per_entry_scales: bool = True, kv_chunk=None,
                       q_block=None, use_pallas=None,
-                      interpret: bool = False):
+                      interpret: bool = False, verify: bool = False):
     """Fused chunked-prefill attention for one layer / one slot / one
     prompt chunk (see module doc).
 
@@ -366,6 +421,12 @@ def prefill_attention(q, k_new, v_new, cache_k, cache_v, kv_pos, pos_start,
                  (Hkv, C) recipe constants; returns (o, (qk, qv)).
     use_pallas:  None = auto (Pallas on TPU, jnp sweep elsewhere);
                  True with interpret=True is the reference fallback.
+    verify:      speculative-verify scoring (module doc): the chunk
+                 attends its OWN K/V through the storage round-trip
+                 (quantize→dequantize, or the cache-dtype cast) instead
+                 of at full precision, so each window row's logits match
+                 a plain decode step of that token. Written codes are
+                 unchanged.
     """
     if mode not in ("fp", "int8"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -394,10 +455,12 @@ def prefill_attention(q, k_new, v_new, cache_k, cache_v, kv_pos, pos_start,
         return _prefill_attention_pallas(
             q, k_new, v_new, cache_k, cache_v, kv_pos, pos_start, length,
             scales, mode=mode, per_entry=per_entry_scales,
-            kv_chunk=kv_chunk, q_block=q_block, interpret=interpret)
+            kv_chunk=kv_chunk, q_block=q_block, interpret=interpret,
+            verify=verify)
     o = _prefill_attention_jnp(
         q, k_new, v_new, cache_k, cache_v, kv_pos, pos_start, length,
-        scales, mode=mode, per_entry=per_entry_scales, kv_chunk=kv_chunk)
+        scales, mode=mode, per_entry=per_entry_scales, kv_chunk=kv_chunk,
+        verify=verify)
     if mode != "int8":
         return o, ()
     if per_entry_scales:

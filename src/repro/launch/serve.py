@@ -126,13 +126,25 @@ def main():
                          "cache copy per step. Default ON; "
                          "--no-fused-attn selects the legacy materialize-"
                          "then-attend oracle")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
+    ap.add_argument("--prefill-chunk", type=int,
+                    default=EngineConfig.prefill_chunk,
                     help="chunked fused prefill: admit at most this many "
                          "prompt tokens per engine step, quantizing K/V "
                          "in-kernel straight into the slot cache (no "
                          "dense fp prefill cache, decode keeps running "
-                         "under long prompts). 0 = legacy one-shot "
-                         "prefill")
+                         "under long prompts). Default ON (engine "
+                         "default); 0 = legacy one-shot prefill opt-out")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: a low-bit draft "
+                         "proposes up to k greedy tokens per slot per "
+                         "step and the target verifies the window in one "
+                         "fused pass (output token-identical to "
+                         "spec_k=0 greedy). 0 = off")
+    ap.add_argument("--draft-recipe", default=None,
+                    help="calibration recipe dir the speculative DRAFT "
+                         "weights are minted from (with --spec-k; "
+                         "without it the target drafts for itself — "
+                         "acceptance ~1 but no draft-cost win)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     ap.add_argument("--recipe", default=None,
@@ -180,6 +192,29 @@ def main():
                for _ in range(args.requests)]
 
     from repro.engine.engine import ENGINE_FAMILIES
+    if args.draft_recipe and not args.spec_k:
+        raise ValueError(
+            "--draft-recipe only takes effect with --spec-k > 0 — the "
+            "recipe would be silently ignored and serving would proceed "
+            "plain-greedy")
+    if args.spec_k and args.wave:
+        # loud, mirroring the family check below: the wave loop has no
+        # speculative path, and silently dropping spec_k would let an
+        # operator believe they measured speculative serving
+        raise NotImplementedError(
+            "--wave has no speculative path (spec_k > 0 is an engine "
+            "feature) — drop --wave or --spec-k")
+    if args.spec_k and cfg.family not in ENGINE_FAMILIES:
+        # loud, not a silent wave fallback: the caller asked for
+        # speculative decoding and these families cannot provide the
+        # positional rollback it needs — surface the family's own reason
+        from repro.models import get_model as _gm
+        vf = getattr(_gm(cfg), "verify_step_slots", None)
+        if vf is None:
+            raise NotImplementedError(
+                f"--spec-k: the {cfg.family!r} family has no speculative "
+                f"verify path")
+        vf()
     if not args.wave and cfg.family not in ENGINE_FAMILIES:
         print(f"note: {cfg.family!r} family has no slot-cache layout yet; "
               f"serving with the wave loop")
@@ -197,7 +232,8 @@ def main():
         n_slots=args.slots, max_len=256,
         max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
         kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
-        prefill_chunk=args.prefill_chunk),
+        prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
+        draft_recipe=args.draft_recipe),
         kv_scales=kv_scales)
     for p in prompts:
         eng.submit(p)
@@ -209,6 +245,13 @@ def main():
           f"util {m['slot_utilization']:.0%}, kv={m['kv_mode']}"
           f"{'/static' if m['kv_static_scales'] else ''} "
           f"({m['kv_bytes_per_token']:.0f} B/token/layer)")
+    if args.spec_k:
+        rate = m["acceptance_rate"]
+        print(f"spec   : k={m['spec_k']}, acceptance "
+              f"{'n/a' if rate is None else f'{rate:.1%}'}, "
+              f"{m['draft_accepted']}/{m['draft_proposed']} drafts "
+              f"accepted over {m['verify_calls']} verifies "
+              f"({m['tokens_per_verify_mean'] or 0:.2f} tokens/verify)")
 
 
 if __name__ == "__main__":

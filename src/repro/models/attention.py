@@ -196,7 +196,7 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
                     causal=True, window=None, kv_chunk=None,
                     cross_kv=None, want_kv=False, tshard_decode=False,
                     kv_pos_override=None, fused_attn=False,
-                    slot_chunk=None):
+                    slot_chunk=None, spec_verify=False):
     """Full attention sub-layer: projections + RoPE + (cache) + attend + out.
 
     p: {"wq","wk","wv","wo"(,biases)}; x: (B, S, d).
@@ -217,6 +217,9 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
     `positions` its absolute positions; the chunk's K/V are quantized
     in-kernel and written straight into the slot's rows (no dense prefill
     cache is assembled). Requires a slot cache, causal, no window.
+    spec_verify: with slot_chunk — the chunk is a speculative DRAFT
+    WINDOW; it attends its own K/V through the cache's storage round-trip
+    so each row scores exactly like a plain decode step (DESIGN.md §9).
     Returns (out, new_cache_layer | (k, v) | None).
     """
     B, S, _ = x.shape
@@ -247,7 +250,7 @@ def attention_block(p, x, cfg, positions, cache_layer=None, *,
             slot, pos_start, length = slot_chunk
             o, new_cache = slot_chunk_prefill(
                 cache_layer, q[0], k[0], v[0], slot, pos_start, length,
-                kv_chunk=kv_chunk)
+                kv_chunk=kv_chunk, verify=spec_verify)
             o = o[None]
         elif fused_attn and S == 1 and causal and window is None:
             # fused decode read: write-only cache update, then dequant-in-

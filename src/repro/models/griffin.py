@@ -301,3 +301,16 @@ def prefill(params, cfg, batch, max_len=None, *, kv_chunk=None,
         raise NotImplementedError("griffin has no MoE layers to block "
                                   f"(moe_blocks={moe_blocks})")
     return forward(params, cfg, batch, kv_chunk=kv_chunk, want_cache=True)
+
+
+def verify_step_slots(*args, **kwargs):
+    """Speculative decoding (engine spec_k > 0) needs positional KV
+    rollback; the RG-LRU recurrence cannot provide it — fail LOUDLY
+    rather than silently serving non-speculative."""
+    raise NotImplementedError(
+        "griffin cannot serve speculative decoding (spec_k > 0): "
+        "rejecting draft tokens requires rolling the cache back to the "
+        "accepted position, but the RG-LRU states integrate every token "
+        "into a running recurrence with no per-position storage (the "
+        "local-attention ring alone cannot restore them). Serve this "
+        "family with spec_k=0")

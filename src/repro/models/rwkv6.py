@@ -246,3 +246,15 @@ def prefill(params, cfg, batch, max_len=None, *, kv_chunk=None,
         raise NotImplementedError("rwkv6 has no MoE layers to block "
                                   f"(moe_blocks={moe_blocks})")
     return forward(params, cfg, batch)
+
+
+def verify_step_slots(*args, **kwargs):
+    """Speculative decoding (engine spec_k > 0) needs positional KV
+    rollback; a recurrence cannot provide it — fail LOUDLY rather than
+    silently serving non-speculative."""
+    raise NotImplementedError(
+        "rwkv6 cannot serve speculative decoding (spec_k > 0): rejecting "
+        "draft tokens requires rolling the cache back to the accepted "
+        "position, but the WKV state is a running recurrence with no "
+        "per-position storage — once a draft token is folded in it "
+        "cannot be unfolded. Serve this family with spec_k=0")

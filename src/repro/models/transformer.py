@@ -69,7 +69,8 @@ def init(key, cfg):
 def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
                  kv_chunk, want_kv: bool, moe_blocks: int = 1,
                  tshard_decode: bool = False, kv_pos_override=None,
-                 fused_attn: bool = False, slot_chunk=None):
+                 fused_attn: bool = False, slot_chunk=None,
+                 spec_verify: bool = False):
     x = shard_hint(x, "dp", None, None)
     h = apply_norm(x, p["ln1"], cfg.norm_type)
     attn_out, kv = attention_block(
@@ -77,7 +78,7 @@ def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
         causal=cfg.family != "encoder", window=cfg.window,
         kv_chunk=kv_chunk, want_kv=want_kv, tshard_decode=tshard_decode,
         kv_pos_override=kv_pos_override, fused_attn=fused_attn,
-        slot_chunk=slot_chunk)
+        slot_chunk=slot_chunk, spec_verify=spec_verify)
     x = x + attn_out
     h = apply_norm(x, p["ln2"], cfg.norm_type)
     if moe:
@@ -89,14 +90,16 @@ def _layer_apply(cfg, p, x, positions, cache_layer, *, moe: bool,
 
 def _scan_stack(cfg, stacked, x, positions, cache, *, moe, kv_chunk,
                 want_kv, remat, moe_blocks=1, tshard_decode=False,
-                kv_pos_override=None, fused_attn=False, slot_chunk=None):
+                kv_pos_override=None, fused_attn=False, slot_chunk=None,
+                spec_verify=False):
     """Scan a homogeneous stacked layer group. cache: per-stack KVCache,
     engine SlotKVCache, or None. Returns (x, new_cache_or_kv, aux_sum)."""
     fn = functools.partial(_layer_apply, cfg, moe=moe, kv_chunk=kv_chunk,
                            want_kv=want_kv, moe_blocks=moe_blocks,
                            tshard_decode=tshard_decode,
                            kv_pos_override=kv_pos_override,
-                           fused_attn=fused_attn, slot_chunk=slot_chunk)
+                           fused_attn=fused_attn, slot_chunk=slot_chunk,
+                           spec_verify=spec_verify)
     if remat:
         fn = jax.checkpoint(fn, static_argnums=())
 
@@ -147,7 +150,8 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
             positions=None, *, kv_chunk=None, want_cache=False, remat=False,
             cache_len: Optional[int] = None, moe_blocks: int = 1,
             tshard_decode: bool = False, pad_mask=None,
-            fused_attn: bool = False, slot_chunk=None):
+            fused_attn: bool = False, slot_chunk=None,
+            spec_verify: bool = False):
     """Returns (logits, new_cache, aux). cache ⇒ decode step (a KVCache, or
     an engine SlotKVCache with per-request positions); want_cache ⇒ prefill
     (assembles a fresh cache from the computed K/V). pad_mask (B, S) marks
@@ -157,7 +161,11 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
     pos_start, length) + a SlotKVCache ⇒ chunked prefill of one slot:
     `positions` are the chunk's absolute positions and each layer's K/V is
     quantized in-kernel and written straight into the slot cache instead
-    of assembling a dense prefill cache."""
+    of assembling a dense prefill cache. spec_verify (with slot_chunk) ⇒
+    the chunk is a speculative DRAFT WINDOW: attention round-trips the
+    window's own K/V through cache storage so each row scores like a plain
+    decode step, and logits for EVERY window row are returned (the accept
+    rule compares per-position argmax)."""
     if cache is not None:
         x = embed_lookup(params["embed"], batch["tokens"])     # (B, 1)
     else:
@@ -188,7 +196,8 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               kv_chunk=kv_chunk, want_kv=want_kv, remat=remat,
                               tshard_decode=tshard_decode,
                               kv_pos_override=kv_pos_override,
-                              fused_attn=fused_attn, slot_chunk=slot_chunk)
+                              fused_attn=fused_attn, slot_chunk=slot_chunk,
+                              spec_verify=spec_verify)
         aux += a
         (caches if cache is not None else kvs).append(c)
     if n_moe:
@@ -198,15 +207,17 @@ def forward(params, cfg, batch, cache: Optional[KVCache] = None,
                               remat=remat, moe_blocks=moe_blocks,
                               tshard_decode=tshard_decode,
                               kv_pos_override=kv_pos_override,
-                              fused_attn=fused_attn, slot_chunk=slot_chunk)
+                              fused_attn=fused_attn, slot_chunk=slot_chunk,
+                              spec_verify=spec_verify)
         aux += a
         (caches if cache is not None else kvs).append(c)
 
-    if slot_chunk is not None:
+    if slot_chunk is not None and not spec_verify:
         # chunk prefill consumes ONLY the last valid token's logits (the
         # first-generated-token sample on the prompt's final chunk) —
         # slice before the head so the vocab projection is (1, 1, V)
-        # instead of (1, Sc, V) per chunk
+        # instead of (1, Sc, V) per chunk. A verify window keeps every
+        # row: the accept rule needs the target's argmax per position.
         x = jax.lax.dynamic_slice_in_dim(x, slot_chunk[2] - 1, 1, axis=1)
     x = apply_norm(x, params["final_norm"], cfg.norm_type)
     head = params.get("lm_head", None)
@@ -338,6 +349,37 @@ def prefill_chunk_slots(params, cfg, cache, tokens, slot, pos_start,
         kv_chunk=kv_chunk, slot_chunk=(slot, pos_start, length))
     return logits[:, 0], cache                 # head already sliced to the
     # chunk's last valid token (see forward's slot_chunk branch)
+
+
+def verify_step_slots(params, cfg, cache, tokens, slot, pos_start, length,
+                      *, kv_chunk=None):
+    """Speculative-decoding VERIFY: score a draft window of ONE slot in a
+    single fused pass (DESIGN.md §9). A draft window *is* a prefill chunk
+    — the window's queries attend the slot's already-committed (possibly
+    INT8) prefix plus the window's own K/V, each layer's window K/V is
+    quantized in-kernel and scattered into rows
+    [pos_start, pos_start + Sq), and — unlike plain chunked prefill —
+    every row attends the window THROUGH the storage round-trip and every
+    row's logits are returned, so row j's argmax equals the token a plain
+    decode step would have produced after window token j. The engine's
+    accept rule then keeps the longest matching draft prefix plus the
+    target's own correction token; rejected rows are undone with
+    `engine.kvcache.rollback_slot`.
+
+    tokens: (1, Sq) int32 — [last committed token, draft tokens...],
+    right-padded to the spec window bucket; slot / pos_start / length are
+    traced scalars, `length` <= Sq the real window size. Returns
+    (logits (1, Sq, V), cache); rows at >= length are padding garbage the
+    caller ignores.
+    """
+    Sq = tokens.shape[1]
+    positions = (jnp.asarray(pos_start, jnp.int32)
+                 + jnp.arange(Sq, dtype=jnp.int32))
+    logits, cache, _ = forward(
+        params, cfg, {"tokens": tokens}, cache=cache, positions=positions,
+        kv_chunk=kv_chunk, slot_chunk=(slot, pos_start, length),
+        spec_verify=True)
+    return logits, cache
 
 
 def prefill(params, cfg, batch, max_len: Optional[int] = None, *,

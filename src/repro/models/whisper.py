@@ -221,3 +221,16 @@ def prefill(params, cfg, batch, max_len=None, *, kv_chunk=None,
             jnp.pad(cache.slot_pos, ((0, 0), (0, pad)), constant_values=-1),
             cache.cross_k, cache.cross_v)
     return logits, cache
+
+
+def verify_step_slots(*args, **kwargs):
+    """Speculative decoding (engine spec_k > 0) runs over the engine's
+    slot cache, which this family does not have — fail LOUDLY rather
+    than silently serving non-speculative."""
+    raise NotImplementedError(
+        "whisper cannot serve speculative decoding (spec_k > 0): the "
+        "engine's draft/verify/rollback contract needs a slot-indexed "
+        "cache with per-position validity, but WhisperCache is a "
+        "wave-loop cache with no slot layout (and no rollback of the "
+        "encoder cross-attention state). Serve this family with "
+        "spec_k=0")

@@ -1,0 +1,348 @@
+"""Self-speculative decoding (engine/spec.py, DESIGN.md §9).
+
+The spec parity suite:
+
+* ENGINE-LEVEL LOSSLESSNESS — speculative greedy output is 100%
+  token-identical to plain greedy decoding on a mixed-length workload at
+  fp, int8-dynamic and int8-static KV, with a genuinely-rejecting
+  low-bit draft (INT2 on random weights rejects almost everything, so
+  rollback runs constantly) and with the self-draft upper bound;
+* VERIFY == SEQUENTIAL DECODE — each verify row's argmax equals the
+  token a plain decode step would have produced (the property the
+  engine-level guarantee rests on);
+* ROLLBACK BIT-EXACTNESS — hypothesis property over random prefix
+  lengths / window sizes / accept lengths: after `rollback_slot` +
+  re-decode, slot codes/scales/kv_pos are bit-identical to a
+  never-speculated cache, in dynamic and static scale modes;
+* LOUD FAILURES — rwkv6 / griffin / whisper raise NotImplementedError
+  on the speculative path (recurrent state has no positional rollback),
+  and non-greedy speculative engines are rejected;
+* accounting — per-slot accepted-length bookkeeping and the flipped
+  chunked-prefill default.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import Engine, EngineConfig
+from repro.engine.kvcache import (init_slot_cache, rollback_slot,
+                                  slot_layer_write)
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 14)))
+               for _ in range(6)]
+    return cfg, model, params, prompts
+
+
+@pytest.fixture(scope="module")
+def draft_int2(setup):
+    """A draft that genuinely disagrees with the target: INT2 splitquant
+    on random-init weights accepts only a few percent of proposals, so
+    the engine-identity tests exercise rejection + rollback on nearly
+    every spec step (a well-matched draft would accept everything and
+    never roll back)."""
+    from repro.core import QuantConfig, QuantPolicy, quantize_tree
+    cfg, model, params, prompts = setup
+    qp, _ = quantize_tree(KEY, params, QuantPolicy(cfg=QuantConfig(bits=2)))
+    return qp
+
+
+@pytest.fixture(scope="module")
+def kv_scales(setup):
+    from repro.calib import collect_kv_stats, kv_static_scales
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, MAX_LEN)) for _ in range(4)]
+    return kv_static_scales(collect_kv_stats(cfg, params, calib, qchunks=4))
+
+
+def run_engine(cfg, params, prompts, *, spec_k, draft=None, kv_mode="fp",
+               scales=None, tokens=8, budgets=None, eos=-1,
+               prefill_chunk=0):
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=3, max_len=MAX_LEN, max_new_tokens=tokens, eos_id=eos,
+        prefill_bucket=8, kv_mode=kv_mode, spec_k=spec_k,
+        prefill_chunk=prefill_chunk), kv_scales=scales, draft_params=draft)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=None if budgets is None else budgets[i])
+    return [r.out for r in eng.drain()], eng
+
+
+# ------------------------------------------------------ accept rule ------
+def test_accept_length_rule():
+    from repro.engine.spec import accept_length
+    # drafts d_1..d_{w-1} vs target rows g_1..g_w
+    assert accept_length([5, 6, 7], [5, 6, 7, 9], 4) == 3    # all accepted
+    assert accept_length([5, 6, 7], [5, 9, 7, 1], 4) == 1    # stop at first
+    assert accept_length([5, 6, 7], [1, 6, 7, 1], 4) == 0    # miss
+    assert accept_length([5], [9], 1) == 0                   # w=1: non-spec
+    assert accept_length([5, 6], [5, 6, 1, 1], 3) == 2
+
+
+# ------------------------------------- engine-level token identity -------
+@pytest.mark.parametrize("kv_mode", ["fp", "int8", "int8-static"])
+def test_spec_greedy_token_identical(setup, draft_int2, kv_scales, kv_mode):
+    """THE acceptance criterion: speculative greedy == plain greedy,
+    token for token, on a mixed-length workload with mixed budgets —
+    windows get budget-capped (mixed spec/non-spec steps) and the INT2
+    draft forces rejections + rollbacks nearly every step."""
+    cfg, model, params, prompts = setup
+    scales = kv_scales if kv_mode == "int8-static" else None
+    mode = "int8" if kv_mode.startswith("int8") else "fp"
+    budgets = [8, 3, 8, 5, 1, 8]
+    base, _ = run_engine(cfg, params, prompts, spec_k=0, kv_mode=mode,
+                         scales=scales, budgets=budgets)
+    spec, eng = run_engine(cfg, params, prompts, spec_k=3, draft=draft_int2,
+                           kv_mode=mode, scales=scales, budgets=budgets)
+    assert spec == base
+    m = eng.metrics()
+    assert m["verify_calls"] > 0 and m["acceptance_rate"] is not None
+    # the INT2 draft must actually have been rejected somewhere, or this
+    # test isn't exercising rollback at all
+    assert m["draft_accepted"] < m["draft_proposed"]
+
+
+def test_spec_self_draft_accepts_everything(setup):
+    """Upper bound: the target drafting for itself accepts every
+    proposal, commits spec_k+1 tokens per full window, and still matches
+    plain greedy exactly."""
+    cfg, model, params, prompts = setup
+    base, _ = run_engine(cfg, params, prompts, spec_k=0)
+    spec, eng = run_engine(cfg, params, prompts, spec_k=3, draft=params)
+    assert spec == base
+    m = eng.metrics()
+    assert m["acceptance_rate"] == 1.0
+    # far fewer engine steps than tokens: windows commit in bulk
+    assert m["spec_steps"] < sum(len(o) for o in base)
+
+
+def test_spec_with_eos_mid_window(setup, draft_int2):
+    """eos inside a committed window truncates the commit exactly like
+    sequential decode (eos never emitted, later commits dropped)."""
+    cfg, model, params, prompts = setup
+    base, _ = run_engine(cfg, params, prompts, spec_k=0)
+    eos = base[0][3]                      # a token greedy actually emits
+    base_e, _ = run_engine(cfg, params, prompts, spec_k=0, eos=eos)
+    spec_e, _ = run_engine(cfg, params, prompts, spec_k=3, draft=params,
+                           eos=eos)
+    assert spec_e == base_e
+    assert all(eos not in o for o in spec_e)
+
+
+def test_spec_with_chunked_prefill(setup, draft_int2):
+    """Speculation composes with chunked fused prefill: the draft cache
+    mirrors every chunk, and output still matches plain greedy (which
+    itself matches one-shot — PR 4's equivalence)."""
+    cfg, model, params, prompts = setup
+    base, _ = run_engine(cfg, params, prompts, spec_k=0, kv_mode="int8",
+                         prefill_chunk=8)
+    spec, _ = run_engine(cfg, params, prompts, spec_k=4, draft=draft_int2,
+                         kv_mode="int8", prefill_chunk=8)
+    assert spec == base
+
+
+# ------------------------------------ verify == sequential decode --------
+def test_verify_rows_match_sequential_decode(setup):
+    """Each verify row's argmax equals the token plain decode would have
+    produced — fed the same window sequentially. This is the per-position
+    property the engine-level identity rests on (and why verify attends
+    its own window through the quantization round-trip)."""
+    from repro.engine.kvcache import write_prefill
+    from repro.models import transformer
+    cfg, model, params, prompts = setup
+    W = 4
+    prompt = prompts[0]
+    S = len(prompt)
+    logits, pc = model.prefill(params, cfg,
+                               {"tokens": jnp.asarray(prompt)[None]})
+    window = [int(jnp.argmax(logits[0, -1]))]
+
+    def fresh():
+        cache = init_slot_cache(cfg, 1, MAX_LEN, mode="int8")
+        return write_prefill(cache, 0, pc, S)
+
+    # sequential: W decode steps, each writing its token then predicting
+    cache = fresh()
+    seq = []
+    for j in range(W):
+        lg, cache = transformer.decode_step_slots(
+            params, cfg, cache, jnp.asarray([[window[j]]], jnp.int32),
+            jnp.asarray([S + j], jnp.int32), fused=True)
+        seq.append(int(jnp.argmax(lg[0, -1])))
+        window.append(seq[-1])
+    # one fused verify of the same window
+    vlog, vcache = transformer.verify_step_slots(
+        params, cfg, fresh(), jnp.asarray([window[:W]], jnp.int32),
+        jnp.int32(0), jnp.int32(S), jnp.int32(W))
+    got = [int(t) for t in np.asarray(jnp.argmax(vlog[0], axis=-1))]
+    assert got == seq
+    # and the verify wrote the same cache bytes the decode steps did
+    np.testing.assert_array_equal(np.asarray(vcache.kv_pos),
+                                  np.asarray(cache.kv_pos))
+    valid = np.asarray(cache.kv_pos)[..., :, None, None] >= 0
+    np.testing.assert_array_equal(
+        np.where(valid, np.asarray(vcache.k), 0),
+        np.where(valid, np.asarray(cache.k), 0))
+
+
+# --------------------------------------------- rollback bit-exactness ----
+@pytest.mark.parametrize("static", [False, True])
+def test_rollback_then_redecode_bitexact(setup, kv_scales, static):
+    """Hypothesis property (random prefix occupancy, window size, accept
+    length): a cache that speculated a window, rolled back to the
+    accepted point, and then wrote the true continuation is bit-identical
+    — codes, scales, kv_pos — to a cache that never speculated."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    cfg, model, params, prompts = setup
+    L, H, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    scales = kv_scales if static else None
+
+    def token_kv(seed):
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.normal(size=(L, H, D)).astype(np.float32)),
+                jnp.asarray(r.normal(size=(L, H, D)).astype(np.float32)))
+
+    def write_token(cache, t, seed):
+        k, v = token_kv(seed)
+
+        def body(_, xs):
+            cl, kl, vl = xs
+            return None, slot_layer_write(
+                cl, kl[None, None], vl[None, None],
+                jnp.full((1, 1), t, jnp.int32))
+        _, new = jax.lax.scan(body, None, (cache, k, v))
+        return new
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 16), st.integers(1, 6), st.data())
+    def prop(prefix, window, data):
+        accept = data.draw(st.integers(0, window - 1))
+        extra = data.draw(st.integers(0, 3))
+        fresh = lambda: init_slot_cache(cfg, 1, 32, mode="int8",
+                                        kv_scales=scales)
+        # never-speculated reference: prefix, then the true continuation
+        ref = fresh()
+        for t in range(prefix + accept + extra):
+            ref = write_token(ref, t, seed=t)
+        # speculated: prefix; window rows where the accepted prefix
+        # carries the TRUE values (accepted drafts ARE the true tokens)
+        # and the rejected tail carries junk; rollback; re-decode truth
+        spec = fresh()
+        for t in range(prefix):
+            spec = write_token(spec, t, seed=t)
+        for j in range(window):
+            t = prefix + j
+            spec = write_token(spec, t,
+                               seed=t if j < accept else 7_000 + j)
+        spec = rollback_slot(spec, 0, prefix + accept)
+        for j in range(extra):
+            t = prefix + accept + j
+            spec = write_token(spec, t, seed=t)
+
+        np.testing.assert_array_equal(np.asarray(spec.kv_pos),
+                                      np.asarray(ref.kv_pos))
+        valid = np.asarray(ref.kv_pos)[0][:, :, None, None] >= 0  # (N,T,1,1)
+        for f in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.where(valid, np.asarray(getattr(spec, f))[0], 0),
+                np.where(valid, np.asarray(getattr(ref, f))[0], 0))
+        if not static:      # per-entry scale rows must match on valid rows
+            vs = valid[..., :1]                          # (N, T, 1, 1)→C
+            for f in ("k_scale", "k_zero", "v_scale", "v_zero"):
+                np.testing.assert_array_equal(
+                    np.where(vs, np.asarray(getattr(spec, f))[0], 0),
+                    np.where(vs, np.asarray(getattr(ref, f))[0], 0))
+
+    prop()
+
+
+def test_rollback_noop_and_full(setup):
+    """Edge cases: rolling back to the current length changes nothing;
+    rolling back to 0 empties the slot like clear_slot."""
+    cfg, model, params, prompts = setup
+    cache = init_slot_cache(cfg, 2, 16, mode="int8")
+    cache = dataclasses.replace(
+        cache, kv_pos=cache.kv_pos.at[:, 0, :5].set(
+            jnp.arange(5, dtype=jnp.int32)))
+    same = rollback_slot(cache, 0, 5)
+    np.testing.assert_array_equal(np.asarray(same.kv_pos),
+                                  np.asarray(cache.kv_pos))
+    empty = rollback_slot(cache, 0, 0)
+    assert int(np.asarray(empty.kv_pos[:, 0]).max()) == -1
+    # other slots untouched
+    np.testing.assert_array_equal(np.asarray(empty.kv_pos[:, 1]),
+                                  np.asarray(cache.kv_pos[:, 1]))
+
+
+# -------------------------------------------------- loud failures --------
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "recurrentgemma-9b",
+                                  "whisper-tiny"])
+def test_unsupported_families_fail_loud(arch):
+    """rwkv6 / griffin / whisper must refuse the speculative path with a
+    reasoned NotImplementedError (recurrent state has no positional
+    rollback) — never a silent non-speculative fallback."""
+    cfg = get_arch(arch).reduced()
+    model = get_model(cfg)
+    with pytest.raises(NotImplementedError, match="spec_k"):
+        model.verify_step_slots()
+    # and the engine itself refuses to construct for these families
+    with pytest.raises(NotImplementedError):
+        Engine(cfg, {}, EngineConfig(n_slots=1, max_len=16, spec_k=2))
+
+
+def test_spec_requires_greedy(setup):
+    cfg, model, params, prompts = setup
+    with pytest.raises(NotImplementedError, match="greedy"):
+        Engine(cfg, params, EngineConfig(
+            n_slots=1, max_len=16, spec_k=2, temperature=0.7))
+
+
+# ----------------------------------------------------- accounting --------
+def test_scheduler_spec_accounting(setup):
+    """Per-slot accepted-length bookkeeping: totals reconcile with the
+    histogram, per-slot pairs sum to the totals, and metrics surface the
+    acceptance rate."""
+    cfg, model, params, prompts = setup
+    _, eng = run_engine(cfg, params, prompts, spec_k=3, draft=params,
+                        tokens=6)
+    s = eng.sched
+    assert s.spec_proposed > 0
+    assert sum(s.accept_hist) == s.spec_accepted
+    assert len(s.accept_hist) == eng.n_verify_calls
+    assert sum(p for p, _ in s.spec_by_slot) == s.spec_proposed
+    assert sum(a for _, a in s.spec_by_slot) == s.spec_accepted
+    m = eng.metrics()
+    assert m["acceptance_rate"] == pytest.approx(
+        s.spec_accepted / s.spec_proposed)
+    assert sum(m["accept_hist"]) == eng.n_verify_calls
+    # every committed token except each request's admission token (sampled
+    # from prefill logits) came through a verify window
+    assert m["total_tokens"] - m["n_finished"] <= m["verify_tokens"]
+
+
+def test_prefill_chunk_default_flipped(setup):
+    """ROADMAP item: chunked fused prefill is the engine default now
+    (prefill_chunk=0 remains the one-shot opt-out)."""
+    cfg, model, params, prompts = setup
+    assert EngineConfig().prefill_chunk > 0
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_len=MAX_LEN, max_new_tokens=2, prefill_bucket=8))
+    for p in prompts[:2]:
+        eng.submit(p)
+    eng.drain()
+    assert eng.n_prefill_chunks > 0 and eng.n_prefills == 0
