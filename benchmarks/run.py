@@ -21,12 +21,31 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 
+def _git_revision() -> dict:
+    """Best-effort (commit, dirty) of the repo this file sits in — absent
+    keys rather than a crash when git or the .git dir is unavailable
+    (artifacts get copied around; provenance should survive that)."""
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip())
+        return {"git_commit": commit, "git_dirty": dirty}
+    except Exception:
+        return {"git_commit": None, "git_dirty": None}
+
+
 def provenance(seed=None) -> dict:
     """Shared provenance header for every BENCH_*.json artifact (one
     definition — serve/calib/spec benches all embed this) so cross-run
     comparisons of tracked numbers are interpretable: a tokens/s delta
-    means nothing without knowing the jax version and device kind that
-    produced each side."""
+    means nothing without knowing the jax version, device kind and git
+    revision that produced each side."""
     import platform
     dev = jax.devices()[0]
     return {
@@ -38,6 +57,7 @@ def provenance(seed=None) -> dict:
         "platform": platform.platform(),
         "seed": seed,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        **_git_revision(),
     }
 
 

@@ -47,6 +47,7 @@ from run import provenance  # noqa: E402
 from repro.configs import get_arch  # noqa: E402
 from repro.engine import Engine, EngineConfig  # noqa: E402
 from repro.models import get_model  # noqa: E402
+from repro.obs import token_agreement  # noqa: E402
 from repro.runtime.serve_loop import Request, ServeConfig, Server  # noqa: E402
 
 
@@ -154,9 +155,19 @@ def main():
                          "per bucket-rounded chunk and under-fill the "
                          "whole-chunk-or-nothing budget; ~4x the "
                          "prefill_bucket is the sweet spot on the CI box)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: caps requests/repeats/soak so the "
+                         "bench (including the tracing-overhead section) "
+                         "finishes in minutes — for the trace smoke job, "
+                         "not for tracked numbers")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.repeats = 1
+        args.soak_requests = min(args.soak_requests, 4)
+        args.max_len = min(args.max_len, 256)
 
     cfg = get_arch(args.arch).reduced()
     model = get_model(cfg)
@@ -205,15 +216,48 @@ def main():
     eng8f_out, eng8f = run_engine(cfg, params, workload, ecfg8f,
                                   args.repeats)
 
-    # greedy-token agreement checks
-    def agreement(a, b):
-        per = [np.mean([x == y for x, y in zip(ra.out, rb.out)])
-               for ra, rb in zip(a, b)]
-        return float(np.mean(per))
-
+    # greedy-token agreement checks (shared helper: repro.obs.summary)
+    agreement = token_agreement
     agree_engine_wave = agreement(eng_out, wave_out)
     agree_int8_fp = agreement(eng8_out, eng_out)
     agree_fused = agreement(eng8f_out, eng8_out)
+
+    # ---- tracing: disabled-mode overhead vs run-to-run noise, and the
+    # traced phase attribution. Tracing defaults OFF and must cost only a
+    # branch — quantified by re-running the default-config (untraced)
+    # measurement and comparing the delta (= the box's noise floor)
+    # against the already-measured eng8f run of the same config.
+    _, eng8f_rerun = run_engine(cfg, params, workload, ecfg8f,
+                                args.repeats)
+    a, b = eng8f["tokens_per_s"], eng8f_rerun["tokens_per_s"]
+    noise_frac = abs(a - b) / max(a, b)
+    traced_cfg = EngineConfig(**{**ecfg8f.__dict__, "trace": True})
+    run_engine(cfg, params, warm, traced_cfg)           # warm traced path
+    _, traced = run_engine(cfg, params, workload, traced_cfg,
+                           args.repeats)
+    pa = traced["phase_attribution"]
+    trace = {
+        "untraced_tokens_per_s": a,
+        "untraced_rerun_tokens_per_s": b,
+        "noise_frac": noise_frac,
+        "traced_tokens_per_s": traced["tokens_per_s"],
+        # enabled-mode cost (sync points + record pushes) — a PROFILING
+        # mode number, reported, not asserted
+        "traced_overhead_frac": 1.0 - traced["tokens_per_s"] / max(a, b),
+        "coverage": pa["coverage"],
+        "dispatch_frac": pa["dispatch_frac"],
+        "device_wait_frac": pa["device_wait_frac"],
+        "phase_attribution": pa,
+    }
+    # disabled-mode overhead must be noise: the two untraced runs are
+    # the same binary + config, so any systematic gap IS measurement
+    # noise — a generous 1.5x bound catches only real regressions
+    # (e.g. instrumentation accidentally on the hot path) without
+    # flaking on a busy CI box
+    assert max(a, b) / min(a, b) < 1.5, \
+        f"untraced serve throughput unstable: {a:.1f} vs {b:.1f} tok/s"
+    assert pa["coverage"] is None or pa["coverage"] >= 0.9, \
+        f"phase coverage {pa['coverage']} < 0.9 of step wall"
 
     # ---- mixed prefill+decode soak: one-shot stall baseline vs chunked
     soak = None
@@ -247,10 +291,13 @@ def main():
                 chunk["tokens_per_s"] / stall["tokens_per_s"],
             # THE stall metric: p95 full-step latency among steps that did
             # prefill work — one-shot pays a whole prompt there, chunked
-            # pays at most the chunk budget
+            # pays at most the chunk budget. None when a (smoke-sized)
+            # run never overlapped prefill with live decoders.
             "step_with_prefill_p95_improvement":
                 stall["step_with_prefill_p95_s"]
-                / chunk["step_with_prefill_p95_s"],
+                / chunk["step_with_prefill_p95_s"]
+                if stall["step_with_prefill_p95_s"] is not None
+                and chunk["step_with_prefill_p95_s"] is not None else None,
             "greedy_agreement_chunked_vs_oneshot":
                 agreement(chunk_out, stall_out),
         }
@@ -271,6 +318,7 @@ def main():
         "greedy_agreement_engine_vs_wave": agree_engine_wave,
         "greedy_agreement_int8kv_vs_fp": agree_int8_fp,
         "greedy_agreement_fused_vs_materialized": agree_fused,
+        "trace": trace,
         "soak": soak,
     }
 
@@ -296,6 +344,12 @@ def main():
     print(f"greedy agreement: engine=wave {agree_engine_wave:.1%}, "
           f"int8=fp {agree_int8_fp:.1%}, fused=materialized "
           f"{agree_fused:.1%}")
+    print(f"trace   : untraced {a:.1f}/{b:.1f} tok/s "
+          f"(noise {noise_frac:.1%}), traced "
+          f"{trace['traced_tokens_per_s']:.1f} tok/s (overhead "
+          f"{trace['traced_overhead_frac']:.1%}), coverage "
+          f"{pa['coverage']:.1%}, dispatch {pa['dispatch_frac']:.0%} / "
+          f"wait {pa['device_wait_frac']:.0%}")
     if soak:
         s1, s2 = soak["oneshot"], soak["chunked"]
 
@@ -308,8 +362,9 @@ def main():
               f"{ms(s2['ttft_p50_s'])} p95 {ms(s2['ttft_p95_s'])}, "
               f"step-with-prefill p95 {ms(s2['step_with_prefill_p95_s'])} "
               f"(chunk {soak['prefill_chunk']})")
+        imp = soak["step_with_prefill_p95_improvement"]
         print(f"soak: step-with-prefill p95 "
-              f"{soak['step_with_prefill_p95_improvement']:.2f}x better "
+              f"{'n/a' if imp is None else f'{imp:.2f}x'} better "
               f"chunked, tokens/s "
               f"{soak['speedup_chunked_vs_oneshot_tokens_per_s']:.2f}x, "
               f"greedy agreement "

@@ -44,6 +44,7 @@ from repro.configs import get_arch  # noqa: E402
 from repro.core import QuantConfig, QuantPolicy, quantize_tree  # noqa: E402
 from repro.engine import Engine, EngineConfig  # noqa: E402
 from repro.models import get_model  # noqa: E402
+from repro.obs import token_agreement  # noqa: E402
 
 from run import provenance  # noqa: E402
 
@@ -91,9 +92,8 @@ def run_engine(cfg, params, workload, ecfg, draft=None, repeats=1):
     return best
 
 
-def agreement(a, b):
-    return float(np.mean([np.mean([x == y for x, y in zip(ra.out, rb.out)])
-                          for ra, rb in zip(a, b)]))
+# greedy-token agreement (shared helper: repro.obs.summary)
+agreement = token_agreement
 
 
 def main():
@@ -198,6 +198,47 @@ def main():
               f"{c['accept_hist']}), agreement {agree:.1%}")
         assert agree == 1.0, (name, agree)   # the accept rule is lossless
 
+    # ---- traced phase attribution of the headline spec config --------
+    # One traced run of the mixed2.9 draft answers WHERE the spec step's
+    # wall goes: draft vs verify vs rollback vs host dispatch (the
+    # ROADMAP's "is verify dispatch-bound?" question). Coverage of the
+    # per-step phase spans must account for >=90% of stepped wall —
+    # anything less means an uninstrumented phase is eating time.
+    traced_cfg = EngineConfig(**{**ecfgS.__dict__, "trace": True})
+    dp_head = drafts["mixed2.9"][0]
+    run_engine(cfg, params, warm, traced_cfg, draft=dp_head)  # warm
+    _, traced = run_engine(cfg, params, workload, traced_cfg,
+                           draft=dp_head, repeats=repeats)
+    pa = traced["phase_attribution"]
+    ph = pa["phases"]
+    step_total = max(pa["step_total_s"], 1e-12)
+
+    def _tot(name):
+        return ph.get(name, {}).get("total_s", 0.0)
+    trace = {
+        "config": "mixed2.9",
+        "traced_tokens_per_s": traced["tokens_per_s"],
+        "coverage": pa["coverage"],
+        "steps": pa["steps"],
+        "step_total_s": pa["step_total_s"],
+        # the four-way split the ISSUE tracks: draft / verify / rollback
+        # / host-dispatch shares of attributed step time
+        "draft_frac_of_step": _tot("draft") / step_total,
+        "verify_frac_of_step": _tot("verify") / step_total,
+        "rollback_frac_of_step": _tot("rollback") / step_total,
+        "dispatch_frac": pa["dispatch_frac"],
+        "device_wait_frac": pa["device_wait_frac"],
+        "phase_attribution": pa,
+    }
+    assert pa["coverage"] is None or pa["coverage"] >= 0.9, \
+        f"spec phase coverage {pa['coverage']} < 0.9 of step wall"
+    print(f"trace(mixed2.9): coverage {pa['coverage']:.1%}, "
+          f"draft {trace['draft_frac_of_step']:.0%} / verify "
+          f"{trace['verify_frac_of_step']:.0%} / rollback "
+          f"{trace['rollback_frac_of_step']:.0%} of step wall; "
+          f"host dispatch {pa['dispatch_frac']:.0%} / device wait "
+          f"{pa['device_wait_frac']:.0%} of attributed time")
+
     head = configs["mixed2.9"]
     result = {
         "provenance": provenance(seed=SEED),
@@ -212,6 +253,7 @@ def main():
                     ("tokens_per_s", "total_tokens", "wall_s",
                      "decode_steps")},
         "configs": configs,
+        "trace": trace,
         # the tracked headline pair: a <=2.9-avg-bit draft's acceptance
         # and its tokens/s vs the non-speculative engine at equal batch
         # (>=1.3x expected once acceptance >= 0.7 — random-init weights

@@ -188,6 +188,24 @@ class EngineConfig:
                                         # dequant-matmul. False keeps the
                                         # draft packed (memory-bound
                                         # deployments with the kernel)
+    trace: bool = False                 # default-OFF observability
+                                        # (repro.obs, DESIGN.md §10):
+                                        # lifecycle events + per-step
+                                        # phase spans with dispatch-vs-
+                                        # device-wait attribution. Traced
+                                        # mode inserts block_until_ready
+                                        # sync points to attribute async
+                                        # dispatch — it is a PROFILING
+                                        # mode, not free; disabled, every
+                                        # site pays one branch
+    trace_capacity: int = 1 << 16       # tracer ring-buffer records;
+                                        # oldest drop first on overflow
+    trace_kv_every: int = 0             # >0: sample KV quantization-
+                                        # quality counters (clip fraction,
+                                        # code occupancy, outlier-chunk
+                                        # histogram) every N steps — a
+                                        # host transfer of live cache
+                                        # rows, traced-mode cost only
 
 
 class Engine:
@@ -210,7 +228,7 @@ class Engine:
                  rng: Optional[jax.Array] = None,
                  clock=time.perf_counter,
                  kv_scales: Optional[dict] = None,
-                 draft_params=None):
+                 draft_params=None, tracer=None):
         if cfg.family not in ENGINE_FAMILIES:
             raise NotImplementedError(
                 f"engine serves transformer families {ENGINE_FAMILIES}, "
@@ -230,7 +248,21 @@ class Engine:
         self.clock = clock
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         from repro.models.common import dtype_of
-        self.sched = Scheduler(ecfg.n_slots, clock=clock)
+        # --- observability (repro.obs, DESIGN.md §10) -------------------
+        # an explicit tracer wins; else ecfg.trace mints one on the
+        # engine's own clock (trace time and metrics share one axis).
+        # Falsy tracers normalize to None so every hot-path site guards
+        # with a single `if tr:` branch — the whole disabled-mode cost.
+        if tracer is None and ecfg.trace:
+            from repro.obs import Tracer
+            tracer = Tracer(capacity=ecfg.trace_capacity, clock=clock,
+                            meta={"arch": cfg.name, "n_slots": ecfg.n_slots,
+                                  "spec_k": ecfg.spec_k,
+                                  "kv_mode": ecfg.kv_mode,
+                                  "prefill_chunk": ecfg.prefill_chunk})
+        self.tracer = tracer if tracer else None
+        self.sched = Scheduler(ecfg.n_slots, clock=clock,
+                               tracer=self.tracer)
         self.cache = init_slot_cache(
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
             dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks,
@@ -257,7 +289,8 @@ class Engine:
                     spec_mod.load_draft_params(ecfg.draft_recipe, params,
                                                cfg)
                     if ecfg.draft_recipe else params)
-            self._spec = spec_mod.SpecDecoder(cfg, ecfg, draft_params)
+            self._spec = spec_mod.SpecDecoder(cfg, ecfg, draft_params,
+                                              tracer=self.tracer)
             self._verify = spec_mod.jitted_verify(cfg)
         # host-side slot state
         N = ecfg.n_slots
@@ -330,12 +363,12 @@ class Engine:
     def _bucket(self, n: int) -> int:
         return bucket_len(n, self.ecfg.prefill_bucket, self.ecfg.max_len)
 
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, reason: str = "eos"):
         """Free the slot everywhere: scheduler, cache row (kv_pos → -1),
         and host-side position/token state, so idle slots genuinely ride
         along at pos 0. A speculative engine clears the draft's mirror
-        row too."""
-        self.sched.retire(slot)
+        row too. ``reason`` ∈ obs.schema.RETIRE_REASONS."""
+        self.sched.retire(slot, reason=reason)
         self.cache = self._clear(self.cache, jnp.int32(slot))
         if self._spec is not None:
             self._spec.clear(slot)
@@ -349,14 +382,18 @@ class Engine:
         it on eos / exhausted budget)."""
         first = int(self._sample(logits_row))
         req.t_first_token = self.clock()
+        if self.tracer:
+            self.tracer.event("first_token", uid=req.uid, slot=slot)
         if first == self.ecfg.eos_id:                 # eos is never emitted
-            self._retire(slot)
+            self._retire(slot, "eos")
             return
         req.out.append(first)
         self._last_tok[slot] = first
         self._pos[slot] = S
-        if len(req.out) >= req.max_new_tokens or S >= self.ecfg.max_len:
-            self._retire(slot)
+        if len(req.out) >= req.max_new_tokens:
+            self._retire(slot, "budget")
+        elif S >= self.ecfg.max_len:
+            self._retire(slot, "max_len")
 
     def _admit_one(self, slot: int, req: EngineRequest) -> int:
         """Legacy ONE-SHOT admission: dense per-request prefill (this is
@@ -365,13 +402,17 @@ class Engine:
         global FP_PREFILL_MATERIALIZATIONS
         if req.max_new_tokens <= 0:                   # explicit 0-token ask
             req.t_first_token = req.t_submit
-            self.sched.retire(slot)
+            self.sched.retire(slot, reason="zero_budget")
             return 0
+        tr = self.tracer
+        t_span = tr.begin() if tr else 0.0
         S = len(req.prompt)
         Sp = self._bucket(S)
         toks = np.zeros((1, Sp), np.int32)
         toks[0, :S] = req.prompt                      # right-pad
+        t_d = tr.now() if tr else 0.0
         logits, pcache = self._prefill(self.params, jnp.asarray(toks))
+        dispatch_s = (tr.now() - t_d) if tr else 0.0
         self.n_prefills += 1
         FP_PREFILL_MATERIALIZATIONS += 1
         # only [0, S) becomes visible; bucket padding stays masked forever
@@ -382,7 +423,12 @@ class Engine:
             # dense materialization — count it honestly)
             self._spec.prefill_oneshot(jnp.asarray(toks), slot, S)
             FP_PREFILL_MATERIALIZATIONS += 1
+        # _start_decoding's sample blocks on the prefill logits, so the
+        # span's tail (dur - dispatch_s) is device wait + first-token work
         self._start_decoding(slot, req, logits[0, S - 1], S)
+        if tr:
+            tr.span_end("prefill_oneshot", t_span, slot=slot, uid=req.uid,
+                        tokens=S, dispatch_s=dispatch_s)
         return S
 
     # --------------------------------------------------- chunked prefill --
@@ -391,7 +437,7 @@ class Engine:
         streams its prompt in over the next step(s)."""
         if req.max_new_tokens <= 0:
             req.t_first_token = req.t_submit
-            self.sched.retire(slot)
+            self.sched.retire(slot, reason="zero_budget")
             return
         self.sched.begin_prefill(slot)
         self._prefill_prog[slot] = 0
@@ -420,6 +466,7 @@ class Engine:
         Returns prompt tokens processed."""
         budget = self.ecfg.prefill_chunk
         spent = 0
+        tr = self.tracer
         for slot in self.sched.prefill_slots():
             req = self.sched.slots[slot]
             S = len(req.prompt)
@@ -427,15 +474,27 @@ class Engine:
             n = min(self.ecfg.prefill_chunk, S - done)
             if n > budget:          # whole chunk or nothing (FCFS head
                 break               # waits; boundaries stay load-free)
+            t_span = tr.begin() if tr else 0.0
+            pos_start = done
             Sc = bucket_len(n, self.ecfg.prefill_bucket,
                             self.ecfg.prefill_chunk)
             toks = np.zeros((1, Sc), np.int32)
             toks[0, :n] = req.prompt[done:done + n]   # right-pad the chunk
+            t_d = tr.now() if tr else 0.0
             logits, self.cache = self._chunk_prefill(
                 self.params, self.cache, jnp.asarray(toks), jnp.int32(slot),
                 jnp.int32(done), jnp.int32(n))
+            dispatch_s = (tr.now() - t_d) if tr else 0.0
             if self._spec is not None:     # mirror the chunk to the draft
                 self._spec.prefill_chunk(jnp.asarray(toks), slot, done, n)
+            wait_s = 0.0
+            if tr:
+                # traced-mode sync: dispatch is async, so without this
+                # the chunk's device time would surface as somebody
+                # else's wait. A deliberate profiling cost.
+                t_w = tr.now()
+                jax.block_until_ready(logits)
+                wait_s = tr.now() - t_w
             self.n_prefill_chunks += 1
             budget -= n
             spent += n
@@ -445,6 +504,10 @@ class Engine:
             if done >= S:                             # prompt complete
                 self.sched.finish_prefill(slot)
                 self._start_decoding(slot, req, logits[0], S)
+            if tr:
+                tr.span_end("prefill_chunk", t_span, slot=slot,
+                            uid=req.uid, pos_start=pos_start, n=n,
+                            dispatch_s=dispatch_s, wait_s=wait_s)
         return spent
 
     # ------------------------------------------- speculative decoding --
@@ -479,40 +542,62 @@ class Engine:
             w[s] = max(1, min(Sq, self.ecfg.max_len - int(pos0[s]), rem))
         drafts = self._spec.draft(self._last_tok, pos0, w)     # (k, N)
         from .spec import accept_length
+        tr = self.tracer
         for s in active:
             req = self.sched.slots[s]
             ws = int(w[s])
+            t_span = tr.begin() if tr else 0.0
             toks = np.zeros((1, Sq), np.int32)
             toks[0, 0] = self._last_tok[s]
             toks[0, 1:ws] = drafts[:ws - 1, s]
+            t_d = tr.now() if tr else 0.0
             garg, self.cache = self._verify(
                 self.params, self.cache, jnp.asarray(toks), jnp.int32(s),
                 jnp.int32(pos0[s]), jnp.int32(ws))
+            t_w = tr.now() if tr else 0.0
             garg = np.asarray(garg)            # (Sq,) target argmax rows
+                                               # — the device wait
+            wait_s = (tr.now() - t_w) if tr else 0.0
             self.n_verify_calls += 1
             self.n_verify_tokens += ws
             a = accept_length(drafts[:, s], garg, ws)
             self.sched.note_spec(s, proposed=ws - 1, accepted=a)
+            if tr:
+                tr.span_end("verify", t_span, slot=s, uid=req.uid,
+                            tokens=ws, accepted=a,
+                            dispatch_s=t_w - t_d, wait_s=wait_s)
             new_pos = int(pos0[s]) + a + 1
             if a + 1 < ws:                     # rejected rows to undo
+                t_rb = tr.begin() if tr else 0.0
                 self.cache = _ROLLBACK(self.cache, jnp.int32(s),
                                        jnp.int32(new_pos))
-            if new_pos < int(pos0[s]) + int(w[s]):
                 self._spec.rollback(s, new_pos)
+                if tr:
+                    tr.span_end("rollback", t_rb, slot=s, uid=req.uid,
+                                accept_len=new_pos)
+                    tr.event("rollback", uid=req.uid, slot=s,
+                             accept_len=new_pos,
+                             rejected=ws - (a + 1))
             # commit g_1..g_{a+1} with the same eos/budget/max_len
             # semantics as sequential decode steps
+            t_c = tr.begin() if tr else 0.0
             for t in (int(x) for x in garg[:a + 1]):
                 if t == self.ecfg.eos_id:      # eos is never emitted
-                    self._retire(s)
+                    self._retire(s, "eos")
                     break
                 req.out.append(t)
                 self.n_spec_commit_tokens += 1
                 self._last_tok[s] = t
                 self._pos[s] += 1
-                if (len(req.out) >= req.max_new_tokens
-                        or self._pos[s] >= self.ecfg.max_len):
-                    self._retire(s)
+                if len(req.out) >= req.max_new_tokens:
+                    self._retire(s, "budget")
                     break
+                if self._pos[s] >= self.ecfg.max_len:
+                    self._retire(s, "max_len")
+                    break
+            if tr:
+                tr.span_end("accept_commit", t_c, slot=s, uid=req.uid,
+                            committed=a + 1)
         self.n_spec_steps += 1
         self.spec_step_s.append(self.clock() - t0)
         self.sched.note_step(len(active))
@@ -564,37 +649,67 @@ class Engine:
             # and the chunk kernel masks cache rows at >= pos_start, so
             # it can never be attended (per-slot attention shields every
             # other request)
+            tr = self.tracer
+            # the decode SPAN opens before staging: the two host->device
+            # puts below are real per-step decode cost (on small models
+            # they rival the matmuls) and must attribute to the phase,
+            # not leak into the step span's uncovered remainder. The
+            # tracked decode_step_s metric keeps its historical bracket
+            # (post-staging t0) so its trend stays comparable across PRs.
+            t_span = tr.begin() if tr else 0.0
             tokens = jnp.asarray(self._last_tok[:, None])
             pos = jnp.asarray(self._pos)
             t0 = self.clock()
             if self._greedy:
                 toks, self.cache = self._decode(self.params, self.cache,
                                                 tokens, pos)
+                t_w = tr.now() if tr else 0.0
                 toks = np.asarray(toks)
             else:
                 logits, self.cache = self._decode(self.params, self.cache,
                                                   tokens, pos)
+                t_w = tr.now() if tr else 0.0
                 toks = np.asarray(self._sample(logits[:, -1]))
             self.n_decode_steps += 1
             # toks is on host here, so this brackets the real per-step
             # decode latency (dispatch + device compute + sample)
             self.decode_step_s.append(self.clock() - t0)
+            if tr:
+                tr.span_end("decode", t_span, slots=len(active),
+                            dispatch_s=t_w - t0, wait_s=tr.now() - t_w)
+            t_c = tr.begin() if tr else 0.0
             for slot in active:
                 req = self.sched.slots[slot]
                 t = int(toks[slot])
                 self._pos[slot] += 1
                 if t == self.ecfg.eos_id:
-                    self._retire(slot)
+                    self._retire(slot, "eos")
                     continue
                 req.out.append(t)
                 self._last_tok[slot] = t
-                if (len(req.out) >= req.max_new_tokens
-                        or self._pos[slot] >= self.ecfg.max_len):
-                    self._retire(slot)
+                if len(req.out) >= req.max_new_tokens:
+                    self._retire(slot, "budget")
+                elif self._pos[slot] >= self.ecfg.max_len:
+                    self._retire(slot, "max_len")
             self.sched.note_step(len(active))
+            if tr:
+                tr.span_end("accept_commit", t_c, slots=len(active))
+        tr = self.tracer
+        if tr and self.ecfg.trace_kv_every and self.cache.mode == "int8" \
+                and len(self.step_s) % self.ecfg.trace_kv_every == 0:
+            # periodic KV quantization-quality sample: a host transfer of
+            # live cache rows — traced-mode-only cost, span-attributed
+            from .kvcache import kv_quality_counters
+            t_q = tr.begin()
+            tr.counter("kv_quality", kv_quality_counters(self.cache))
+            tr.span_end("kv_sample", t_q)
         self.step_s.append(self.clock() - t_step0)
         self.step_prefill_tokens.append(prefill_tokens)
         self.step_decode_slots.append(n_decoding_before)
+        if tr:
+            tr.span_end("step", t_step0,
+                        prefill_tokens=prefill_tokens,
+                        decode_slots=n_decoding_before)
         return self.sched.finished[n_done_before:]
 
     def drain(self) -> list[EngineRequest]:
@@ -606,6 +721,7 @@ class Engine:
 
     # ----------------------------------------------------------- metrics --
     def metrics(self) -> dict:
+        from repro.obs import mean, pct as p, phase_breakdown
         fin = self.sched.finished
         ttfts = [r.ttft for r in fin if r.ttft is not None]
         tps = [r.tokens_per_s for r in fin if r.tokens_per_s is not None]
@@ -616,9 +732,6 @@ class Engine:
         pmask = (np.asarray(self.step_prefill_tokens, np.int64) > 0) \
             & (np.asarray(self.step_decode_slots, np.int64) > 0)
         withp = full[pmask[:full.size]] if full.size else full
-
-        def p(a, q):
-            return float(np.percentile(a, q)) if a.size else None
         spec = {}
         if self.ecfg.spec_k:
             hist = np.bincount(np.asarray(self.sched.accept_hist,
@@ -649,7 +762,7 @@ class Engine:
                 "spec_step_p95_s": p(sstep, 95),
                 "spec_by_slot": [list(x) for x in self.sched.spec_by_slot],
             }
-        return {
+        out = {
             "n_finished": len(fin),
             "total_tokens": total_tokens,
             "wall_s": wall,
@@ -660,15 +773,13 @@ class Engine:
             "prefill_chunk": self.ecfg.prefill_chunk,
             "slot_utilization": self.sched.utilization(),
             "queue_depth_max": max(self.sched.queue_depth_hist, default=0),
-            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
-            "ttft_p50_s": float(np.median(ttfts)) if ttfts else None,
-            "ttft_p95_s": (float(np.percentile(ttfts, 95))
-                           if ttfts else None),
-            "request_tokens_per_s_mean": float(np.mean(tps)) if tps else None,
+            "ttft_mean_s": mean(ttfts),
+            "ttft_p50_s": p(ttfts, 50),
+            "ttft_p95_s": p(ttfts, 95),
+            "request_tokens_per_s_mean": mean(tps),
             "decode_step_p50_s": p(steps, 50),
             "decode_step_p95_s": p(steps, 95),
-            "decode_step_mean_s": (float(steps.mean())
-                                   if steps.size else None),
+            "decode_step_mean_s": mean(steps),
             # full-step latency: the admission-stall telemetry — a step
             # that prefilled a whole prompt one-shot blocks every decoding
             # slot for that long; chunked prefill bounds it by the budget
@@ -682,3 +793,11 @@ class Engine:
             "kv_bytes_per_token": self.cache.bytes_per_token(),
             **spec,
         }
+        if self.tracer:
+            # traced engines embed the phase-attribution summary so every
+            # metrics consumer (serve.py --metrics-json, the benchmarks)
+            # gets the step-time breakdown without reparsing the trace
+            out["phase_attribution"] = phase_breakdown(self.tracer.events)
+            out["trace_records"] = len(self.tracer.events)
+            out["trace_dropped"] = self.tracer.dropped
+        return out

@@ -460,3 +460,65 @@ def rollback_slot(cache: SlotKVCache, slot: int, accept_len: int
 def slice_layers(cache: SlotKVCache, lo: int, hi: int) -> SlotKVCache:
     """Layer-range view, mirroring `forward`'s dense/MoE stack split."""
     return jax.tree_util.tree_map(lambda x: x[lo:hi], cache)
+
+
+# -------------------------------------------------- quality counters ---
+def kv_quality_counters(cache: SlotKVCache, max_rows: int = 4096,
+                        ref_scales: Optional[dict] = None) -> dict:
+    """Sample quantization-quality counters from a live int8 slot cache
+    (host-side numpy; see `repro.obs.quality` and DESIGN.md §10).
+
+    Reads only rows kv_pos marks valid (stale retired/rolled-back bytes
+    would poison the statistics), subsampling evenly to ``max_rows``
+    (token, slot) rows per array so the transfer stays bounded on big
+    caches. Returns a flat dict of numbers/lists — the shape the tracer's
+    ``counter`` records and the Chrome exporter expect:
+
+    * ``{k,v}_clip_frac`` / ``{k,v}_occupancy`` — code saturation and
+      code-range use (`quality.code_stats`); the static-scale drift
+      signals (clipping up = recipe too narrow, occupancy down = too
+      wide).
+    * dynamic scales only: ``{k,v}_span_median`` / ``_span_outlier_hist``
+      — per-chunk range spread and the OCS outlier histogram, plus
+      ``_occupancy_vs_ref`` when a recipe's ``ref_scales`` dict
+      ((L, Hkv, C) arrays, same layout as `init_slot_cache`) is given to
+      compare live ranges against.
+    """
+    import numpy as np
+
+    from repro.obs.quality import code_stats, scale_to_span, span_stats
+
+    if cache.mode != "int8":
+        raise ValueError("KV quality counters require an int8 cache")
+    valid = np.asarray(cache.kv_pos) >= 0                  # (L, N, T)
+    n_valid = int(valid.sum())
+    out: dict = {"valid_rows": n_valid, "static": int(cache.static),
+                 "qchunks": cache.qchunks}
+    if not n_valid:
+        return out
+    lidx, nidx, tidx = np.nonzero(valid)
+    if lidx.size > max_rows:                    # even, deterministic
+        keep = np.linspace(0, lidx.size - 1, max_rows).astype(np.int64)
+        lidx, nidx, tidx = lidx[keep], nidx[keep], tidx[keep]
+    out["sampled_rows"] = int(lidx.size)
+    for name, codes in (("k", cache.k), ("v", cache.v)):
+        cs = code_stats(np.asarray(codes)[lidx, nidx, tidx],
+                        bits=8)
+        out[f"{name}_clip_frac"] = cs["clip_frac"]
+        out[f"{name}_occupancy"] = cs["occupancy"]
+    if not cache.static:
+        for name, scale in (("k", cache.k_scale), ("v", cache.v_scale)):
+            spans = scale_to_span(np.asarray(scale)[lidx, nidx, tidx])
+            ref = None
+            if ref_scales is not None:
+                # recipe scales are per-layer constants (L, Hkv, C):
+                # broadcast to the sampled rows through lidx
+                ref = scale_to_span(
+                    np.asarray(ref_scales[f"{name}_scale"],
+                               np.float64)[lidx])
+            st = span_stats(spans, ref)
+            out[f"{name}_span_median"] = st["span_median"]
+            out[f"{name}_span_outlier_hist"] = st["outlier_hist"]
+            if ref is not None:
+                out[f"{name}_occupancy_vs_ref"] = st["occupancy_vs_ref"]
+    return out

@@ -29,6 +29,9 @@ class EngineRequest:
     t_submit: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    # why the request retired: one of obs.schema.RETIRE_REASONS
+    # ("eos" | "budget" | "max_len" | "zero_budget"); None while running
+    finish_reason: Optional[str] = None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -47,9 +50,13 @@ class EngineRequest:
 class Scheduler:
     """FCFS queue + fixed slot pool."""
 
-    def __init__(self, n_slots: int, clock=time.perf_counter):
+    def __init__(self, n_slots: int, clock=time.perf_counter, tracer=None):
         self.n_slots = n_slots
         self.clock = clock
+        # lifecycle-event sink (obs.Tracer); the scheduler owns the
+        # submit/admit/retire transitions so it emits those events.
+        # Falsy tracers normalize to None — one branch per site disabled.
+        self.tracer = tracer if tracer else None
         self.queue: collections.deque[EngineRequest] = collections.deque()
         self.slots: list[Optional[EngineRequest]] = [None] * n_slots
         self.finished: list[EngineRequest] = []
@@ -77,6 +84,11 @@ class Scheduler:
         req.t_submit = self.clock()
         self.queue.append(req)
         self.n_submitted += 1
+        if self.tracer:
+            self.tracer.event("submit", uid=req.uid,
+                              prompt_len=int(len(req.prompt)),
+                              budget=req.max_new_tokens,
+                              queue_depth=len(self.queue))
         return req
 
     # ---------------------------------------------------------- stepping --
@@ -114,19 +126,29 @@ class Scheduler:
             self.slots[slot] = req
             self.n_admitted += 1
             placed.append((slot, req))
+            if self.tracer:
+                self.tracer.event(
+                    "admit", uid=req.uid, slot=slot,
+                    queued_s=self.clock() - req.t_submit)
         self.queue_depth_hist.append(len(self.queue))
         return placed
 
-    def retire(self, slot: int) -> EngineRequest:
-        """Free a slot whose request finished (eos or token budget)."""
+    def retire(self, slot: int, reason: str = "eos") -> EngineRequest:
+        """Free a slot whose request finished. ``reason`` is the
+        lifecycle vocabulary ("eos" | "budget" | "max_len" |
+        "zero_budget") — recorded on the request and in the trace."""
         req = self.slots[slot]
         assert req is not None, f"retire of empty slot {slot}"
         req.done = True
         req.t_done = self.clock()
+        req.finish_reason = reason
         self.slots[slot] = None
         if slot in self._prefilling:            # retired mid-prefill (eos
             self._prefilling.remove(slot)       # on first token, 0 budget)
         self.finished.append(req)
+        if self.tracer:
+            self.tracer.event("retire", uid=req.uid, slot=slot,
+                              reason=reason, n_out=len(req.out))
         return req
 
     # ------------------------------------------------------------- state --

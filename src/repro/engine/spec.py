@@ -122,11 +122,14 @@ class SpecDecoder:
     draft keeps the scale mode that needs no extra calibration artifact.
     """
 
-    def __init__(self, cfg, ecfg, draft_params):
+    def __init__(self, cfg, ecfg, draft_params, tracer=None):
         from repro.models.common import dtype_of
         self.cfg = cfg
         self.ecfg = ecfg
         self.k = ecfg.spec_k
+        # obs.Tracer (falsy → None): the draft pass emits one aggregated
+        # "draft" span per engine step with dispatch/wait attribution
+        self.tracer = tracer if tracer else None
         if ecfg.draft_dequantize:
             # one-time expansion of packed SplitQuantTensors into the
             # compute dtype: every draft decode step would otherwise
@@ -198,15 +201,28 @@ class SpecDecoder:
         cur_pos = np.asarray(pos, np.int32).copy()
         steps = np.asarray(steps)
         drafts = np.zeros((self.k, N), np.int32)
-        for j in range(int(steps.max())):
+        tr = self.tracer
+        t_span = tr.begin() if tr else 0.0
+        dispatch_s = wait_s = 0.0
+        n_iter = int(steps.max())
+        for j in range(n_iter):
+            if tr:
+                t_d = tr.now()
             toks, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(cur_tok[:, None]),
                 jnp.asarray(cur_pos))
-            toks = np.asarray(toks)
+            if tr:
+                dispatch_s += (t_w := tr.now()) - t_d
+            toks = np.asarray(toks)                # device wait per iter
+            if tr:
+                wait_s += tr.now() - t_w
             self.n_draft_steps += 1
             if j < self.k:
                 drafts[j] = toks
             adv = (j + 1) < steps
             cur_tok = np.where(adv, toks, cur_tok).astype(np.int32)
             cur_pos = np.where(adv, cur_pos + 1, cur_pos).astype(np.int32)
+        if tr:
+            tr.span_end("draft", t_span, iters=n_iter,
+                        dispatch_s=dispatch_s, wait_s=wait_s)
         return drafts

@@ -174,6 +174,46 @@ def act_split_quantize_ref(x: jnp.ndarray, *, bits: int = 8,
     return q.reshape(R, N), scale, zero
 
 
+# ------------------------------------------------ quality observation ---
+#: module-level quality probe (`repro.obs.quality.ActQuantProbe`) fed by
+#: the *_observed host wrappers below. The jitted kernels stay untouched
+#: — observation happens on their OUTPUTS, and pulling codes to host is
+#: the (deliberate, observed-mode-only) cost. None = observation off.
+_QUALITY_PROBE = None
+
+
+def set_quality_probe(probe) -> None:
+    """Install the module-level `ActQuantProbe` (None clears it). The
+    probe sees every `act_split_quantize_observed` /
+    `act_split_quantize_static_observed` call's codes + dynamic scales."""
+    global _QUALITY_PROBE
+    _QUALITY_PROBE = probe if probe else None
+
+
+def act_split_quantize_observed(x, *, layer=None, **kw):
+    """`act_split_quantize` + quality observation: same returns, and when
+    a probe is installed its saturation/occupancy counters (plus the
+    per-row-chunk range spread, via the dynamic scales) accumulate."""
+    q, scale, zero = act_split_quantize(x, **kw)
+    probe = _QUALITY_PROBE
+    if probe is not None:
+        probe.observe(np.asarray(q), np.asarray(scale), layer=layer)
+    return q, scale, zero
+
+
+def act_split_quantize_static_observed(x, scale, zero, *, layer=None,
+                                       **kw):
+    """`act_split_quantize_static` + quality observation. Static scales
+    carry no per-call range information, so the probe sees codes only —
+    clip fraction and code occupancy, exactly the drift signals a frozen
+    recipe needs watched (DESIGN.md §10)."""
+    q = act_split_quantize_static(x, scale, zero, **kw)
+    probe = _QUALITY_PROBE
+    if probe is not None:
+        probe.observe(np.asarray(q), layer=layer)
+    return q
+
+
 def dequantize_act(q, scale, zero, dtype=jnp.float32):
     """Works for both layouts: dynamic per-row scale/zero (R, n_chunks)
     and static per-tensor scale/zero (n_chunks,), including static scales

@@ -145,6 +145,28 @@ def main():
                          "weights are minted from (with --spec-k; "
                          "without it the target drafts for itself — "
                          "acceptance ~1 but no draft-cost win)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable engine tracing (repro.obs) and write the "
+                         "JSONL event log here: per-request lifecycle "
+                         "events + per-step phase spans with dispatch-vs-"
+                         "device-wait attribution. Inspect with "
+                         "launch/trace_report.py. Engine only (not "
+                         "--wave); a profiling mode — adds sync points")
+    ap.add_argument("--trace-chrome", default=None, metavar="PATH",
+                    help="with --trace: also export a Chrome/Perfetto "
+                         "trace.json (one track per slot, one per engine "
+                         "phase) to this path")
+    ap.add_argument("--trace-kv-every", type=int, default=0,
+                    metavar="N",
+                    help="with --trace and --kv-mode int8: sample KV "
+                         "quantization-quality counters (clip fraction, "
+                         "occupancy, outlier-chunk histogram) every N "
+                         "engine steps into the trace. 0 = off")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the full Engine.metrics() dict as JSON "
+                         "(machine-checkable soak runs; includes the "
+                         "phase_attribution section when --trace is on). "
+                         "Engine only (not --wave)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     ap.add_argument("--recipe", default=None,
@@ -215,10 +237,22 @@ def main():
                 f"--spec-k: the {cfg.family!r} family has no speculative "
                 f"verify path")
         vf()
+    if (args.trace_chrome or args.trace_kv_every) and not args.trace:
+        raise ValueError(
+            "--trace-chrome / --trace-kv-every require --trace — without "
+            "it no trace is recorded and the flags would be silently "
+            "ignored")
     if not args.wave and cfg.family not in ENGINE_FAMILIES:
         print(f"note: {cfg.family!r} family has no slot-cache layout yet; "
               f"serving with the wave loop")
         args.wave = True
+    if args.wave and (args.trace or args.metrics_json):
+        # loud, mirroring the spec_k check above: the wave loop has no
+        # tracer or metrics dict, and silently dropping the flags would
+        # let an operator believe they captured a trace
+        raise NotImplementedError(
+            "--trace/--metrics-json are engine features — the wave loop "
+            "has no tracer or metrics() snapshot; drop --wave")
     if args.wave:
         srv = Server(cfg, params, ServeConfig(
             max_batch=args.slots, max_new_tokens=args.max_new_tokens,
@@ -233,7 +267,8 @@ def main():
         max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
         kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
         prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
-        draft_recipe=args.draft_recipe),
+        draft_recipe=args.draft_recipe, trace=bool(args.trace),
+        trace_kv_every=args.trace_kv_every),
         kv_scales=kv_scales)
     for p in prompts:
         eng.submit(p)
@@ -252,6 +287,25 @@ def main():
               f"{m['draft_accepted']}/{m['draft_proposed']} drafts "
               f"accepted over {m['verify_calls']} verifies "
               f"({m['tokens_per_verify_mean'] or 0:.2f} tokens/verify)")
+    if args.trace:
+        n = eng.tracer.to_jsonl(args.trace)
+        print(f"trace  : {n} records -> {args.trace} "
+              f"({eng.tracer.dropped} dropped); inspect with "
+              f"python -m repro.launch.trace_report {args.trace}")
+        if args.trace_chrome:
+            eng.tracer.to_chrome(args.trace_chrome)
+            print(f"trace  : chrome/perfetto -> {args.trace_chrome}")
+        pa = m["phase_attribution"]
+        if pa["coverage"] is not None:
+            print(f"trace  : phase coverage {pa['coverage']:.0%} of "
+                  f"step wall; dispatch {pa['dispatch_frac']:.0%} / "
+                  f"device wait {pa['device_wait_frac']:.0%} of "
+                  f"attributed time")
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump(m, f, indent=2, default=float)
+        print(f"metrics: -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""Default-off observability for the serving stack (DESIGN.md §10).
+
+`tracer.Tracer` records spans/events/counters into a bounded ring buffer
+and exports JSONL + Chrome ``trace.json``; `schema` is the phase/
+lifecycle vocabulary and validator; `report` aggregates traces into the
+phase-breakdown / waterfall views; `summary` is the shared
+percentile-with-empty-guard math every metrics consumer reuses;
+`quality` holds the quantization-quality counters.
+"""
+from repro.obs.quality import ActQuantProbe, code_stats, span_stats
+from repro.obs.report import (lifecycle_summary, phase_breakdown,
+                              request_waterfalls)
+from repro.obs.schema import LIFECYCLE, PHASES, RETIRE_REASONS, \
+    validate_events
+from repro.obs.summary import mean, pct, summarize, token_agreement
+from repro.obs.tracer import SCHEMA_VERSION, Tracer, chrome_trace, \
+    load_jsonl
+
+__all__ = [
+    "Tracer", "SCHEMA_VERSION", "chrome_trace", "load_jsonl",
+    "PHASES", "LIFECYCLE", "RETIRE_REASONS", "validate_events",
+    "phase_breakdown", "request_waterfalls", "lifecycle_summary",
+    "pct", "mean", "summarize", "token_agreement",
+    "ActQuantProbe", "code_stats", "span_stats",
+]

@@ -302,3 +302,99 @@ def test_serve_from_recipe_without_kmeans(setup, kv_scales, tmp_path,
     assert all(len(r.out) == 2 for r in fin)
     m = eng.metrics()
     assert m["kv_static_scales"] is True
+
+
+# ------------------------------------------------------ metrics + trace ---
+def test_metrics_empty_engine(setup):
+    """metrics() on a never-stepped engine: all-zero counters and None
+    (not NaN/crash) for every percentile/mean with no samples."""
+    cfg, model, params, prompts = setup
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_len=MAX_LEN,
+                                           prefill_bucket=8))
+    m = eng.metrics()
+    assert m["n_finished"] == 0 and m["total_tokens"] == 0
+    assert m["tokens_per_s"] is None
+    assert m["ttft_p95_s"] is None and m["ttft_mean_s"] is None
+    assert m["decode_step_p50_s"] is None
+    assert m["step_with_prefill_p95_s"] is None
+    assert m["steps_with_prefill"] == 0
+    # untraced engines never grow trace keys
+    assert "phase_attribution" not in m and "trace_records" not in m
+
+
+def test_metrics_spec_counters_only_when_spec(setup):
+    cfg, model, params, prompts = setup
+    base = EngineConfig(n_slots=2, max_len=MAX_LEN, max_new_tokens=3,
+                        prefill_bucket=8, kv_mode="int8")
+    eng = Engine(cfg, params, base)
+    eng.submit(prompts[0])
+    eng.drain()
+    m = eng.metrics()
+    for k in ("spec_k", "acceptance_rate", "accept_hist", "verify_calls"):
+        assert k not in m
+    spec_cfg = EngineConfig(**{**base.__dict__, "spec_k": 2})
+    engS = Engine(cfg, params, spec_cfg, draft_params=params)
+    engS.submit(prompts[0])
+    engS.drain()
+    mS = engS.metrics()
+    assert mS["spec_k"] == 2 and mS["verify_calls"] > 0
+    assert len(mS["accept_hist"]) == 3            # a in [0, spec_k]
+
+
+def test_metrics_step_with_prefill_none_without_concurrent_decode(setup):
+    """step_with_prefill_p95_s covers steps where prefill ran WHILE other
+    slots decoded; a single-request engine never overlaps the two."""
+    cfg, model, params, prompts = setup
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_len=MAX_LEN,
+                                           max_new_tokens=3,
+                                           prefill_bucket=8))
+    eng.submit(prompts[0])
+    eng.drain()
+    m = eng.metrics()
+    assert m["n_finished"] == 1
+    assert m["steps_with_prefill"] == 0
+    assert m["step_with_prefill_p95_s"] is None
+    assert m["step_p95_s"] is not None            # steps did happen
+
+
+def test_traced_engine_end_to_end(setup, tmp_path):
+    """EngineConfig(trace=True): valid schema, finish reasons, lifecycle
+    events for every request, >=90% step-wall phase coverage, and
+    identical greedy tokens to the untraced engine."""
+    from repro.obs import validate_events
+
+    cfg, model, params, prompts = setup
+    base = EngineConfig(n_slots=2, max_len=MAX_LEN, max_new_tokens=4,
+                        prefill_bucket=8, kv_mode="int8")
+    fin0 = [r.out for r in _drained(Engine(cfg, params, base), prompts[:4])]
+    traced_cfg = EngineConfig(**{**base.__dict__, "trace": True,
+                                 "trace_kv_every": 2})
+    eng = Engine(cfg, params, traced_cfg)
+    fin = _drained(eng, prompts[:4])
+    assert [r.out for r in fin] == fin0           # tracing never resteers
+    assert all(r.finish_reason in ("budget", "eos", "max_len")
+               for r in fin)
+    records = list(eng.tracer.records())
+    assert validate_events(records) == []
+    events = {r["name"] for r in records if r.get("kind") == "event"}
+    assert {"submit", "admit", "first_token", "retire"} <= events
+    uids = {r["uid"] for r in records
+            if r.get("kind") == "event" and r["name"] == "retire"}
+    assert uids == {r.uid for r in fin}
+    assert any(r.get("kind") == "counter" and r["name"] == "kv_quality"
+               for r in records)                  # trace_kv_every fired
+    m = eng.metrics()
+    pa = m["phase_attribution"]
+    assert pa["coverage"] >= 0.9
+    assert m["trace_records"] == len(eng.tracer.events)
+    # exporters round-trip from a live engine
+    path = str(tmp_path / "t.jsonl")
+    eng.tracer.to_jsonl(path)
+    from repro.obs import load_jsonl
+    assert validate_events(load_jsonl(path)) == []
+
+
+def _drained(eng, prompts):
+    for p in prompts:
+        eng.submit(p)
+    return eng.drain()

@@ -1,0 +1,395 @@
+"""Observability package: tracer ring buffer + exporters, event schema
+validation, shared summary math, phase-breakdown/waterfall aggregation,
+quantization-quality counters, and the observed act-quant wrappers."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import (ActQuantProbe, SCHEMA_VERSION, Tracer, chrome_trace,
+                       code_stats, lifecycle_summary, load_jsonl, mean,
+                       pct, phase_breakdown, request_waterfalls, span_stats,
+                       summarize, token_agreement, validate_events)
+from repro.obs.quality import scale_to_span
+
+
+class FakeClock:
+    """Deterministic monotonic clock: every call advances by ``tick``."""
+
+    def __init__(self, tick=0.001):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+# --------------------------------------------------------------- tracer ---
+def test_tracer_disabled_is_falsy_and_records_nothing():
+    tr = Tracer(enabled=False, clock=FakeClock())
+    assert not tr
+    tr.span_end("decode", tr.begin())
+    tr.event("submit", uid=0)
+    tr.counter("kv_quality", 1.0)
+    assert len(tr.events) == 0 and tr.dropped == 0
+
+
+def test_tracer_records_and_ring_buffer_drops_oldest():
+    tr = Tracer(capacity=4, clock=FakeClock())
+    assert tr
+    for i in range(7):
+        tr.event("submit", uid=i)
+    assert len(tr.events) == 4
+    assert tr.dropped == 3
+    assert [r["uid"] for r in tr.events] == [3, 4, 5, 6]   # newest kept
+    assert tr.header()["dropped"] == 3
+
+
+def test_tracer_span_fields_and_timebase():
+    clk = FakeClock(tick=0.5)
+    tr = Tracer(clock=clk)                     # t0 = 0.5
+    t0 = tr.begin()                            # 1.0
+    tr.span_end("decode", t0, slots=3, dispatch_s=0.1, wait_s=0.2)
+    rec = tr.events[0]
+    assert rec["kind"] == "span" and rec["name"] == "decode"
+    assert rec["ts"] == pytest.approx(0.5)     # t_begin - t0
+    assert rec["dur"] == pytest.approx(0.5)    # one tick begin -> end
+    assert rec["slots"] == 3 and rec["dispatch_s"] == 0.1
+
+
+def test_tracer_span_contextmanager_records_on_exception():
+    tr = Tracer(clock=FakeClock())
+    with pytest.raises(RuntimeError):
+        with tr.span("decode", slot=1):
+            raise RuntimeError("boom")
+    assert len(tr.events) == 1 and tr.events[0]["name"] == "decode"
+
+
+def test_tracer_jsonl_roundtrip(tmp_path):
+    tr = Tracer(clock=FakeClock(), meta={"arch": "t"})
+    tr.event("submit", uid=0, prompt_len=5, budget=8)
+    tr.span_end("step", tr.begin())
+    path = str(tmp_path / "trace.jsonl")
+    n = tr.to_jsonl(path)
+    records = load_jsonl(path)
+    assert n == len(records) == 3              # header + 2
+    assert records[0]["kind"] == "header"
+    assert records[0]["schema"] == SCHEMA_VERSION
+    assert records[0]["arch"] == "t"
+    assert validate_events(records) == []
+
+
+def test_chrome_trace_tracks():
+    tr = Tracer(clock=FakeClock())
+    tr.span_end("decode", tr.begin(), slot=2)
+    tr.span_end("draft", tr.begin())           # un-slotted -> phase track
+    tr.event("submit", uid=0)
+    tr.counter("kv_quality", {"k_clip_frac": 0.1, "hist": [1, 2]})
+    ct = chrome_trace(list(tr.records()))
+    evs = ct["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"decode", "draft"}
+    slot_span = next(e for e in xs if e["name"] == "decode")
+    assert slot_span["tid"] == 3               # 1 + slot
+    assert any(e["ph"] == "i" and e["name"] == "submit" for e in evs)
+    counter = next(e for e in evs if e["ph"] == "C")
+    assert counter["args"] == {"k_clip_frac": 0.1}     # list filtered out
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"slot 2", "requests", "counters", "phase:draft"} <= names
+
+
+# --------------------------------------------------------------- schema ---
+def _valid_records():
+    return [
+        {"kind": "header", "schema": SCHEMA_VERSION, "capacity": 16,
+         "dropped": 0},
+        {"kind": "event", "name": "submit", "ts": 0.0, "uid": 0},
+        {"kind": "event", "name": "admit", "ts": 0.1, "uid": 0, "slot": 1},
+        {"kind": "span", "name": "step", "ts": 0.1, "dur": 0.2},
+        {"kind": "span", "name": "decode", "ts": 0.15, "dur": 0.1,
+         "dispatch_s": 0.02, "wait_s": 0.05},
+        {"kind": "event", "name": "retire", "ts": 0.4, "uid": 0,
+         "reason": "eos"},
+        {"kind": "counter", "name": "kv_quality", "ts": 0.5,
+         "value": {"k_clip_frac": 0.0, "hist": [1, 2], "none": None}},
+    ]
+
+
+def test_validate_events_accepts_valid_trace():
+    assert validate_events(_valid_records()) == []
+
+
+@pytest.mark.parametrize("mutate,fragment", [
+    (lambda r: r.pop(0), "expected header"),
+    (lambda r: r[0].update(schema=99), "schema"),
+    (lambda r: r[3].update(name="warp"), "unknown phase"),
+    (lambda r: r[3].update(dur=-1.0), "bad dur"),
+    (lambda r: r[4].update(dispatch_s=-0.1), "bad dispatch_s"),
+    (lambda r: r[5].update(reason="bored"), "bad retire reason"),
+    (lambda r: r[1].pop("uid"), "missing/bad uid"),
+    (lambda r: r[6].update(value=object), "bad counter value"),
+    (lambda r: r.append({"kind": "mystery"}), "unknown kind"),
+])
+def test_validate_events_rejects(mutate, fragment):
+    records = _valid_records()
+    mutate(records)
+    errs = validate_events(records)
+    assert errs and any(fragment in e for e in errs), errs
+
+
+def test_validate_events_empty():
+    assert validate_events([]) == ["empty trace (no header record)"]
+
+
+# -------------------------------------------------------------- summary ---
+def test_summary_empty_guards():
+    assert pct([], 95) is None and mean([]) is None
+    s = summarize([])
+    assert s == {"count": 0, "mean": None, "p50": None, "p95": None}
+
+
+def test_summary_values():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert mean(vals) == 2.5
+    assert pct(vals, 50) == 2.5
+    s = summarize(vals, percentiles=(50,))
+    assert s["count"] == 4 and s["p50"] == 2.5 and "p95" not in s
+
+
+def test_token_agreement():
+    class R:
+        def __init__(self, out):
+            self.out = out
+    assert token_agreement([R([1, 2])], [R([1, 2])]) == 1.0
+    assert token_agreement([R([1, 2]), R([3])],
+                           [R([1, 9]), R([3])]) == pytest.approx(0.75)
+    assert token_agreement([R([])], [R([])]) == 0.0   # no common positions
+    assert token_agreement([], []) is None
+
+
+# --------------------------------------------------------------- report ---
+def _step_records():
+    """Two steps of 1.0 s each; phases tile 1.8 s of the 2.0 s total."""
+    recs = [{"kind": "header", "schema": SCHEMA_VERSION}]
+    for i in range(2):
+        t = float(i)
+        recs += [
+            {"kind": "span", "name": "decode", "ts": t, "dur": 0.6,
+             "dispatch_s": 0.4, "wait_s": 0.1},
+            {"kind": "span", "name": "accept_commit", "ts": t + 0.6,
+             "dur": 0.3},
+            {"kind": "span", "name": "step", "ts": t, "dur": 1.0},
+        ]
+    return recs
+
+
+def test_phase_breakdown_coverage_and_attribution():
+    pb = phase_breakdown(_step_records())
+    assert pb["steps"] == 2
+    assert pb["step_total_s"] == pytest.approx(2.0)
+    assert pb["attributed_s"] == pytest.approx(1.8)
+    assert pb["coverage"] == pytest.approx(0.9)
+    dec = pb["phases"]["decode"]
+    assert dec["count"] == 2 and dec["total_s"] == pytest.approx(1.2)
+    assert dec["frac_of_step"] == pytest.approx(0.6)
+    assert dec["host_s"] == pytest.approx(1.0)         # total - wait
+    assert pb["dispatch_frac"] == pytest.approx(0.8 / 1.8)
+    assert pb["device_wait_frac"] == pytest.approx(0.2 / 1.8)
+    assert pb["other_host_s"] == pytest.approx(0.8)
+    # "step" is the denominator, never a phase row
+    assert "step" not in pb["phases"]
+
+
+def test_phase_breakdown_empty():
+    pb = phase_breakdown([])
+    assert pb["steps"] == 0 and pb["coverage"] is None
+    assert pb["dispatch_frac"] is None
+
+
+def test_waterfalls_and_lifecycle():
+    recs = [
+        {"kind": "event", "name": "submit", "ts": 0.0, "uid": 1,
+         "prompt_len": 7, "budget": 4},
+        {"kind": "event", "name": "admit", "ts": 0.2, "uid": 1, "slot": 0},
+        {"kind": "event", "name": "first_token", "ts": 0.5, "uid": 1},
+        {"kind": "event", "name": "retire", "ts": 1.0, "uid": 1,
+         "reason": "budget", "n_out": 4},
+        {"kind": "event", "name": "submit", "ts": 0.1, "uid": 0},
+    ]
+    rows = request_waterfalls(recs)
+    assert [r["uid"] for r in rows] == [0, 1]          # uid order
+    full = rows[1]
+    assert full["queued_s"] == pytest.approx(0.2)
+    assert full["prefill_s"] == pytest.approx(0.3)
+    assert full["decode_s"] == pytest.approx(0.5)
+    assert full["total_s"] == pytest.approx(1.0)
+    assert full["slot"] == 0 and full["reason"] == "budget"
+    assert rows[0]["total_s"] is None                  # never retired
+    ls = lifecycle_summary(recs)
+    assert ls["requests"] == 2
+    assert ls["retire_reasons"] == {"budget": 1}
+    assert ls["total_s"]["mean"] == pytest.approx(1.0)
+
+
+# -------------------------------------------------------------- quality ---
+def test_code_stats():
+    q = np.array([-128, -128, 0, 50, 127], np.int8)
+    cs = code_stats(q, bits=8)
+    assert cs["n"] == 5
+    assert cs["lo_clip_frac"] == pytest.approx(0.4)
+    assert cs["hi_clip_frac"] == pytest.approx(0.2)
+    assert cs["clip_frac"] == pytest.approx(0.6)
+    assert cs["occupancy"] == pytest.approx(1.0)
+    empty = code_stats(np.zeros((0,), np.int8))
+    assert empty["n"] == 0 and empty["clip_frac"] is None
+
+
+def test_span_stats_hist_and_ref():
+    spans = [1.0, 1.0, 1.0, 8.01]        # one >8x-median outlier chunk
+    st = span_stats(spans)
+    assert st["chunks"] == 4 and st["span_median"] == 1.0
+    assert st["outlier_hist"][-1] == 1                 # the 8.01 bucket
+    assert sum(st["outlier_hist"]) == 4
+    st = span_stats([2.0, 2.0], ref_spans=[4.0, 4.0])
+    assert st["occupancy_vs_ref"] == pytest.approx(0.5)
+    # non-finite / non-positive spans are filtered, pairing preserved
+    st = span_stats([2.0, np.inf, 0.0], ref_spans=[1.0, 1.0, 1.0])
+    assert st["chunks"] == 1 and st["occupancy_vs_ref"] == 2.0
+    assert span_stats([])["span_median"] is None
+
+
+def test_scale_to_span_inverts_eq2():
+    span = np.array([0.5, 4.0])
+    scale = 255.0 / span
+    np.testing.assert_allclose(scale_to_span(scale, bits=8), span)
+    assert scale_to_span(np.array([0.0]))[0] == 0.0    # degenerate guard
+
+
+def test_act_quant_probe_weighting_and_tracer():
+    tr = Tracer(clock=FakeClock())
+    probe = ActQuantProbe(tracer=tr, bits=8)
+    probe.observe(np.full(3, 127, np.int8))            # all clipped
+    probe.observe(np.zeros(9, np.int8), scale=np.array([255.0 / 2.0]))
+    s = probe.summary()
+    assert s["calls"] == 2 and s["elements"] == 12
+    assert s["clip_frac"] == pytest.approx(3 / 12)     # element-weighted
+    assert s["span_median"] == pytest.approx(2.0)
+    assert len(tr.events) == 2                         # live counters
+    assert tr.events[0]["kind"] == "counter"
+    assert validate_events(list(tr.records())) == []
+
+
+# ------------------------------------------- kv_quality_counters (int8) ---
+def test_kv_quality_counters():
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.engine.kvcache import init_slot_cache, kv_quality_counters
+    cfg = get_arch("stablelm-1.6b").reduced()
+    cache = init_slot_cache(cfg, n_slots=2, max_len=8, mode="int8",
+                            qchunks=4)
+    empty = kv_quality_counters(cache)
+    assert empty["valid_rows"] == 0 and "k_clip_frac" not in empty
+    # hand-write slot 0 positions [0, 5): random codes, unit scales —
+    # stale slot-1 bytes stay masked (kv_pos = -1) and must not count
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-128, 128, size=cache.k.shape).astype(np.int8)
+    pos = np.full(cache.kv_pos.shape, -1, np.int32)
+    pos[:, 0, :5] = np.arange(5)
+    cache = dataclasses.replace(cache, k=jnp.asarray(codes),
+                                v=jnp.asarray(codes),
+                                kv_pos=jnp.asarray(pos))
+    out = kv_quality_counters(cache)
+    assert out["valid_rows"] == cfg.n_layers * 5
+    assert out["sampled_rows"] == out["valid_rows"]
+    assert 0.0 <= out["k_clip_frac"] <= 1.0
+    assert 0.0 <= out["v_occupancy"] <= 1.0
+    assert out["k_span_median"] > 0                    # unit scales
+    assert sum(out["k_span_outlier_hist"]) > 0
+    sub = kv_quality_counters(cache, max_rows=3)
+    assert sub["sampled_rows"] == 3                    # subsample cap
+    fp = init_slot_cache(cfg, n_slots=1, max_len=4, mode="fp")
+    with pytest.raises(ValueError):
+        kv_quality_counters(fp)
+
+
+def test_kv_quality_counters_ref_scales():
+    from repro.configs import get_arch
+    from repro.engine.kvcache import (init_slot_cache, kv_quality_counters,
+                                      write_prefill)
+    from repro.models import get_model
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.arange(5)[None] % cfg.vocab)
+    _, pc = model.prefill(params, cfg, {"tokens": toks}, max_len=8)
+    cache = init_slot_cache(cfg, n_slots=1, max_len=8, mode="int8",
+                            qchunks=4)
+    cache = write_prefill(cache, 0, pc, 5)
+    C = (cfg.n_layers, cfg.n_kv_heads, 4)
+    ref = {f"{n}_scale": np.full(C, 255.0 / 4.0) for n in ("k", "v")}
+    out = kv_quality_counters(cache, ref_scales=ref)
+    assert out["k_occupancy_vs_ref"] is not None
+    assert out["k_occupancy_vs_ref"] > 0
+
+
+# ------------------------------------------------ observed act wrappers ---
+def test_act_quant_observed_wrappers():
+    from repro.kernels.act_quant import (act_split_quantize,
+                                         act_split_quantize_observed,
+                                         act_split_quantize_static,
+                                         act_split_quantize_static_observed,
+                                         set_quality_probe)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(256, 12)),
+                    jnp.float32)
+    probe = ActQuantProbe()
+    set_quality_probe(probe)
+    try:
+        q, s, z = act_split_quantize_observed(x, n_chunks=3,
+                                              interpret=True)
+        qs = act_split_quantize_static_observed(
+            x, jnp.full((3,), 10.0), jnp.zeros(3), interpret=True)
+    finally:
+        set_quality_probe(None)
+    # same numerics as the unobserved kernels
+    q0, _, _ = act_split_quantize(x, n_chunks=3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q0))
+    qs0 = act_split_quantize_static(x, jnp.full((3,), 10.0),
+                                    jnp.zeros(3), interpret=True)
+    np.testing.assert_array_equal(np.asarray(qs), np.asarray(qs0))
+    summ = probe.summary()
+    assert summ["calls"] == 2
+    assert summ["elements"] == 2 * x.size
+    assert summ["span_median"] is not None     # dynamic call fed scales
+    # probe cleared: observed call records nothing further
+    act_split_quantize_observed(x, n_chunks=3, interpret=True)
+    assert probe.summary()["calls"] == 2
+
+
+def test_trace_report_cli(tmp_path):
+    """End-to-end: synthetic trace -> JSONL -> CLI (validate + chrome)."""
+    from repro.launch.trace_report import main as report_main
+    tr = Tracer(clock=FakeClock())
+    tr.event("submit", uid=0, prompt_len=4, budget=2)
+    tr.event("admit", uid=0, slot=0, queued_s=0.001)
+    t = tr.begin()
+    tr.span_end("decode", t, slots=1, dispatch_s=0.0, wait_s=0.0)
+    tr.event("first_token", uid=0)
+    tr.event("retire", uid=0, slot=0, reason="budget", n_out=2)
+    tr.span_end("step", t)
+    path = str(tmp_path / "t.jsonl")
+    tr.to_jsonl(path)
+    chrome = str(tmp_path / "t.trace.json")
+    rc = report_main([path, "--validate", "--chrome", chrome])
+    assert rc == 0
+    ct = json.load(open(chrome))
+    assert any(e.get("ph") == "X" for e in ct["traceEvents"])
+    # corrupt trace fails --validate
+    bad = str(tmp_path / "bad.jsonl")
+    with open(bad, "w") as f:
+        f.write(json.dumps({"kind": "span", "name": "warp", "ts": 0.0,
+                            "dur": 1.0}) + "\n")
+    assert report_main([bad, "--validate", "--waterfalls", "0"]) == 1
