@@ -1,0 +1,253 @@
+"""Noise-aware perf-regression gate over the committed BENCH_*.json
+baselines.
+
+    PYTHONPATH=src python benchmarks/check_regression.py            # fresh
+    PYTHONPATH=src python benchmarks/check_regression.py --smoke    # self-check
+
+Every PR regenerates BENCH files; this script is the CI tripwire that
+turns "the numbers moved" into an exit code. Two modes:
+
+* default: compare fresh BENCH files in ``--fresh-dir`` against the
+  committed baselines in ``--baseline-dir`` gate by gate; exit 1 on any
+  regression. Relative gates (throughput, speedups, step latency) get a
+  noise-aware tolerance: ``max(--tol, 3 × trace.noise_frac)``, where
+  ``noise_frac`` is the run-to-run delta serve_bench measures between
+  two identical untraced runs — a CI box that is 1.6% noisy gets a
+  ~5% gate, not a flaky 1% one. Floor gates (greedy agreement, trace
+  coverage) are absolute: correctness metrics have no noise excuse.
+
+* ``--smoke``: self-check for CI — the committed baselines compared
+  against THEMSELVES must pass (exit 0 path exercised), and a
+  synthetically degraded copy (throughput halved, agreement broken)
+  must be flagged (exit 1 path exercised). Runs in milliseconds with no
+  model execution, so every CI run proves the gate can actually fire —
+  a regression gate that silently stopped failing is worse than none.
+
+Gates live in ``GATES`` below — add one line when a new tracked number
+lands in a BENCH file. A gate whose path is missing from the baseline is
+skipped (older baselines predate the metric); missing from the FRESH
+file is a failure (a tracked metric silently vanished).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One tracked number: ``kind`` is "higher" (regression when fresh
+    drops below baseline by more than the tolerance), "lower" (latency:
+    regression when fresh rises above), or "floor" (absolute: regression
+    when fresh < ``floor`` regardless of the baseline)."""
+
+    file: str
+    path: str                  # dot-separated into the JSON tree
+    kind: str                  # "higher" | "lower" | "floor"
+    floor: Optional[float] = None
+
+
+GATES = [
+    # serving: the headline engine-vs-wave and fused-read numbers
+    Gate("BENCH_serve.json", "speedup_tokens_per_s", "higher"),
+    Gate("BENCH_serve.json", "speedup_fused_vs_materialized_int8",
+         "higher"),
+    Gate("BENCH_serve.json", "engine_int8_kv_fused.tokens_per_s",
+         "higher"),
+    Gate("BENCH_serve.json", "engine_int8_kv_fused.decode_step_p95_s",
+         "lower"),
+    Gate("BENCH_serve.json",
+         "soak.speedup_chunked_vs_oneshot_tokens_per_s", "higher"),
+    # correctness floors — greedy equivalence is exact by construction
+    Gate("BENCH_serve.json", "greedy_agreement_engine_vs_wave",
+         "floor", floor=0.999),
+    Gate("BENCH_serve.json", "greedy_agreement_fused_vs_materialized",
+         "floor", floor=0.999),
+    Gate("BENCH_serve.json", "soak.greedy_agreement_chunked_vs_oneshot",
+         "floor", floor=0.999),
+    Gate("BENCH_serve.json", "trace.coverage", "floor", floor=0.9),
+    # calibration: static-scale decode win + first-token faithfulness
+    Gate("BENCH_calib.json", "static_kv_decode.static_speedup",
+         "higher"),
+    Gate("BENCH_calib.json",
+         "static_kv_decode.greedy_agreement_first3_tokens",
+         "floor", floor=0.999),
+    # speculative decoding: int8 draft acceptance + lossless guarantee
+    Gate("BENCH_spec.json", "configs.int8.acceptance_rate", "higher"),
+    Gate("BENCH_spec.json", "configs.int8.greedy_agreement_vs_nonspec",
+         "floor", floor=0.999),
+    Gate("BENCH_spec.json", "configs.self.acceptance_rate",
+         "floor", floor=0.999),
+]
+
+_MISSING = object()
+
+
+def get(tree: dict, path: str):
+    cur = tree
+    for seg in path.split("."):
+        if not isinstance(cur, dict) or seg not in cur:
+            return _MISSING
+        cur = cur[seg]
+    return _MISSING if cur is None else cur
+
+
+def noise_frac(tree: dict) -> float:
+    """The file's own measured run-to-run noise (serve_bench records it
+    under trace.noise_frac); 0 for files that don't measure one."""
+    v = get(tree, "trace.noise_frac")
+    return float(v) if v is not _MISSING else 0.0
+
+
+def check_file(name: str, base: dict, fresh: dict, tol: float) \
+        -> list[str]:
+    """All gate failures for one BENCH file (empty list = pass)."""
+    fails = []
+    # the gate must survive whichever run was noisier
+    eff_tol = max(tol, 3.0 * max(noise_frac(base), noise_frac(fresh)))
+    for g in GATES:
+        if g.file != name:
+            continue
+        f = get(fresh, g.path)
+        if g.kind == "floor":
+            if f is _MISSING:
+                if get(base, g.path) is _MISSING:
+                    continue                      # predates the metric
+                fails.append(f"{name}:{g.path} vanished from fresh run")
+            elif float(f) < g.floor:
+                fails.append(f"{name}:{g.path} = {float(f):.4f} below "
+                             f"floor {g.floor}")
+            continue
+        b = get(base, g.path)
+        if b is _MISSING:
+            continue                              # baseline predates it
+        if f is _MISSING:
+            fails.append(f"{name}:{g.path} vanished from fresh run")
+            continue
+        b, f = float(b), float(f)
+        if g.kind == "higher" and f < b * (1.0 - eff_tol):
+            fails.append(f"{name}:{g.path} regressed {b:.4g} -> {f:.4g} "
+                         f"({f / b - 1.0:+.1%}, tol {eff_tol:.1%})")
+        elif g.kind == "lower" and f > b * (1.0 + eff_tol):
+            fails.append(f"{name}:{g.path} regressed {b:.4g} -> {f:.4g} "
+                         f"({f / b - 1.0:+.1%}, tol {eff_tol:.1%})")
+    return fails
+
+
+def compare_dirs(baseline_dir: str, fresh_dir: str, tol: float) \
+        -> tuple[list[str], int]:
+    """(failures, n_gates_checked) across every gated BENCH file present
+    in the baseline dir."""
+    fails, checked = [], 0
+    for name in sorted({g.file for g in GATES}):
+        bpath = os.path.join(baseline_dir, name)
+        fpath = os.path.join(fresh_dir, name)
+        if not os.path.exists(bpath):
+            continue                    # this repo doesn't track it yet
+        if not os.path.exists(fpath):
+            fails.append(f"{name}: fresh file missing from {fresh_dir}")
+            continue
+        with open(bpath) as fh:
+            base = json.load(fh)
+        with open(fpath) as fh:
+            fresh = json.load(fh)
+        checked += sum(1 for g in GATES if g.file == name)
+        fails.extend(check_file(name, base, fresh, tol))
+    return fails, checked
+
+
+def degrade(tree: dict) -> dict:
+    """Synthetically regress every gated number in a BENCH tree: halve
+    "higher" metrics, double "lower" ones, break floors — the --smoke
+    proof that the gate fires on a real regression."""
+    out = json.loads(json.dumps(tree))            # deep copy
+    for g in GATES:
+        cur = out
+        segs = g.path.split(".")
+        for seg in segs[:-1]:
+            if not isinstance(cur, dict) or seg not in cur \
+                    or cur[seg] is None:
+                cur = None
+                break
+            cur = cur[seg]
+        if not isinstance(cur, dict) or segs[-1] not in cur \
+                or cur[segs[-1]] is None:
+            continue
+        v = float(cur[segs[-1]])
+        cur[segs[-1]] = {"higher": v * 0.5, "lower": v * 2.0,
+                         "floor": (g.floor or 1.0) * 0.5}[g.kind]
+    return out
+
+
+def smoke(baseline_dir: str, tol: float) -> int:
+    """Self-check: baselines vs themselves must PASS, a degraded copy
+    must FAIL. Exit 0 only when both hold."""
+    fails, checked = compare_dirs(baseline_dir, baseline_dir, tol)
+    if not checked:
+        print("smoke: no gated BENCH files found — nothing to protect")
+        return 1
+    if fails:
+        print(f"smoke FAIL: committed baselines do not pass their own "
+              f"gates ({len(fails)}):")
+        for f in fails:
+            print(f"  {f}")
+        return 1
+    print(f"smoke: {checked} gates pass against committed baselines")
+    with tempfile.TemporaryDirectory() as tmp:
+        for name in sorted({g.file for g in GATES}):
+            p = os.path.join(baseline_dir, name)
+            if not os.path.exists(p):
+                continue
+            with open(p) as fh:
+                tree = json.load(fh)
+            with open(os.path.join(tmp, name), "w") as fh:
+                json.dump(degrade(tree), fh)
+        dfails, _ = compare_dirs(baseline_dir, tmp, tol)
+    if not dfails:
+        print("smoke FAIL: synthetically degraded BENCH files were NOT "
+              "flagged — the gate cannot fire")
+        return 1
+    print(f"smoke: degraded copies flagged {len(dfails)} regressions "
+          f"(gate can fire), e.g.:")
+    for f in dfails[:4]:
+        print(f"  {f}")
+    return 0
+
+
+def main(argv=None) -> int:
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    ap = argparse.ArgumentParser(
+        description="noise-aware BENCH_*.json regression gate")
+    ap.add_argument("--baseline-dir", default=root,
+                    help="committed baselines (default: repo root)")
+    ap.add_argument("--fresh-dir", default=root,
+                    help="freshly generated BENCH files to judge")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="relative tolerance floor; the effective gate "
+                         "is max(tol, 3x the measured noise_frac)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-check: baselines pass, degraded copies "
+                         "fail — proves the gate fires without running "
+                         "any model")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke(args.baseline_dir, args.tol)
+    fails, checked = compare_dirs(args.baseline_dir, args.fresh_dir,
+                                  args.tol)
+    if fails:
+        print(f"REGRESSION: {len(fails)} of {checked} gates failed:")
+        for f in fails:
+            print(f"  {f}")
+        return 1
+    print(f"ok: {checked} gates pass "
+          f"({args.fresh_dir} vs {args.baseline_dir})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

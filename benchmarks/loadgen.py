@@ -1,0 +1,210 @@
+"""Seeded open-loop load generator: Poisson + burst arrivals with
+request classes and SLO definitions.
+
+Closed-loop benches (submit everything, drain) self-throttle: the
+submission rate automatically matches the engine's service rate, so
+queueing collapse is invisible — the engine always looks "keeping up"
+because the bench waits for it. An OPEN-loop process submits on a
+schedule that does not care how the engine is doing; offered load is an
+independent variable, and the latency-vs-load curve shows exactly where
+queueing delay departs from the service floor (the saturation knee).
+
+The arrival process is a two-state Markov-modulated Poisson process
+(MMPP-2): a base Poisson rate, punctuated by burst episodes at
+``burst_factor`` × that rate, with exponentially distributed episode
+durations. Bursts are what kill SLOs in production — a plain Poisson
+stream at the same mean rate hides the transient queue spikes admission
+control has to survive. Poisson memorylessness makes the state-boundary
+handling exact: crossing an episode boundary just redraws the next gap
+at the new rate.
+
+Everything derives from ONE ``numpy.random.default_rng(seed)``: same
+seed ⇒ byte-identical arrival times, class draws, prompts, and budgets
+(asserted in tests/test_metrics.py) — so a BENCH open-loop section is
+reproducible and two engine configs can be compared on the *same*
+arrival sequence.
+
+SLO model (per request class): TTFT ≤ ``ttft_slo_s`` AND mean
+time-per-output-token after the first ≤ ``tpot_slo_s``. A request
+*attains* its SLO when both hold; **goodput** is tokens/s counted over
+SLO-attaining requests only (throughput that arrives too late to matter
+is not good). The per-class attainment-vs-offered-load curve and its
+knee land in BENCH_serve.json (serve_bench --open-loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+#: Request-class mix: mostly latency-sensitive interactive traffic with
+#: a minority of long batch jobs (the wave-stalling tail, now with a
+#: looser SLO instead of no SLO). ``weight`` is the class draw
+#: probability; prompt/new_tokens are inclusive-exclusive rng ranges.
+CLASSES: dict[str, dict] = {
+    "interactive": {"weight": 0.8, "prompt": (4, 12),
+                    "new_tokens": (8, 24),
+                    "ttft_slo_s": 0.30, "tpot_slo_s": 0.020},
+    "batch": {"weight": 0.2, "prompt": (24, 64),
+              "new_tokens": (32, 64),
+              "ttft_slo_s": 2.00, "tpot_slo_s": 0.050},
+}
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One scheduled request: arrival time (s since schedule start),
+    class name, prompt token ids, and generation budget."""
+
+    t: float
+    cls: str
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+def poisson_burst_times(rng: np.random.Generator, n: int, rate: float,
+                        burst_factor: float = 4.0,
+                        burst_fraction: float = 0.25,
+                        mean_burst_s: float = 0.5) -> np.ndarray:
+    """n arrival times of an MMPP-2: Poisson at ``rate`` in the normal
+    state, ``rate * burst_factor`` inside bursts; episode lengths are
+    exponential with mean ``mean_burst_s`` (burst) and the normal-state
+    mean chosen so ``burst_fraction`` of wall time is bursty. The mean
+    offered rate is therefore rate * (1 + (burst_factor-1) *
+    burst_fraction). ``rate=inf`` degenerates to all-at-t=0 (the
+    closed-loop limit, useful as the sweep's saturating endpoint)."""
+    if not np.isfinite(rate):
+        return np.zeros(n, np.float64)
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    mean_normal_s = mean_burst_s * (1.0 - burst_fraction) \
+        / max(burst_fraction, 1e-9)
+    times = np.empty(n, np.float64)
+    t = 0.0
+    bursty = False
+    # time remaining in the current episode; exponential draws keep the
+    # whole schedule a pure function of the rng stream
+    left = rng.exponential(mean_normal_s)
+    for i in range(n):
+        while True:
+            r = rate * (burst_factor if bursty else 1.0)
+            gap = rng.exponential(1.0 / r)
+            if gap < left:                   # arrival inside the episode
+                t += gap
+                left -= gap
+                times[i] = t
+                break
+            # crossed an episode boundary: advance to it, flip state,
+            # redraw (exact — exponential gaps are memoryless)
+            t += left
+            bursty = not bursty
+            left = rng.exponential(mean_burst_s if bursty
+                                   else mean_normal_s)
+    return times
+
+
+def make_open_loop_workload(seed: int, n: int, vocab: int, rate: float,
+                            classes: Optional[dict] = None,
+                            burst_factor: float = 4.0,
+                            burst_fraction: float = 0.25) \
+        -> list[Arrival]:
+    """The full deterministic schedule: arrival times + class draws +
+    prompts + budgets from one seeded rng. Same (seed, n, vocab, rate,
+    …) ⇒ identical schedule, byte for byte."""
+    classes = classes or CLASSES
+    rng = np.random.default_rng(seed)
+    times = poisson_burst_times(rng, n, rate, burst_factor,
+                                burst_fraction)
+    names = list(classes)
+    weights = np.asarray([classes[c]["weight"] for c in names],
+                         np.float64)
+    weights = weights / weights.sum()
+    draws = rng.choice(len(names), size=n, p=weights)
+    out = []
+    for i in range(n):
+        spec = classes[names[draws[i]]]
+        plen = int(rng.integers(*spec["prompt"]))
+        budget = int(rng.integers(*spec["new_tokens"]))
+        out.append(Arrival(t=float(times[i]), cls=names[draws[i]],
+                           prompt=rng.integers(0, vocab, size=plen,
+                                               dtype=np.int64),
+                           max_new_tokens=budget))
+    return out
+
+
+def request_slo(arr: Arrival, req, classes: Optional[dict] = None) \
+        -> dict:
+    """Judge one finished engine request against its class SLO. ``req``
+    needs ``.ttft`` / ``.t_first_token`` / ``.t_done`` / ``.out`` (the
+    engine's EngineRequest surface)."""
+    spec = (classes or CLASSES)[arr.cls]
+    ttft = req.ttft
+    n_out = len(req.out)
+    tpot = None
+    if req.t_first_token is not None and req.t_done is not None \
+            and n_out > 1:
+        tpot = (req.t_done - req.t_first_token) / (n_out - 1)
+    ttft_ok = ttft is not None and ttft <= spec["ttft_slo_s"]
+    # single-token requests have no decode cadence to judge
+    tpot_ok = tpot is None or tpot <= spec["tpot_slo_s"]
+    return {"cls": arr.cls, "ttft_s": ttft, "tpot_s": tpot,
+            "tokens": n_out, "attained": bool(ttft_ok and tpot_ok)}
+
+
+def slo_summary(judged: list[dict], wall_s: float,
+                classes: Optional[dict] = None) -> dict:
+    """Aggregate per-class SLO attainment + goodput from `request_slo`
+    rows. Percentile math via obs.summary (None-on-empty preserved)."""
+    from repro.obs.summary import mean, pct
+    classes = classes or CLASSES
+    out: dict = {"per_class": {}}
+    for cls in classes:
+        rows = [j for j in judged if j["cls"] == cls]
+        ttfts = [j["ttft_s"] for j in rows if j["ttft_s"] is not None]
+        tpots = [j["tpot_s"] for j in rows if j["tpot_s"] is not None]
+        att = [j["attained"] for j in rows]
+        good = sum(j["tokens"] for j in rows if j["attained"])
+        out["per_class"][cls] = {
+            "requests": len(rows),
+            "ttft_slo_s": classes[cls]["ttft_slo_s"],
+            "tpot_slo_s": classes[cls]["tpot_slo_s"],
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p95_s": pct(ttfts, 95),
+            "tpot_p95_s": pct(tpots, 95),
+            "slo_attainment": mean(att),
+            "goodput_tokens": good,
+            "goodput_tokens_per_s": good / wall_s if wall_s > 0 else None,
+        }
+    total_tokens = sum(j["tokens"] for j in judged)
+    good_tokens = sum(j["tokens"] for j in judged if j["attained"])
+    out["requests"] = len(judged)
+    out["slo_attainment"] = mean([j["attained"] for j in judged])
+    out["total_tokens"] = total_tokens
+    out["goodput_tokens_per_s"] = good_tokens / wall_s if wall_s > 0 \
+        else None
+    out["throughput_tokens_per_s"] = total_tokens / wall_s \
+        if wall_s > 0 else None
+    return out
+
+
+def find_knee(points: list[dict], threshold: float = 0.9,
+              key: str = "slo_attainment") -> Optional[dict]:
+    """Locate the saturation knee in an offered-load sweep: the first
+    point (ascending offered load) whose ``key`` drops below
+    ``threshold``, paired with the last point still above it. None when
+    the engine never saturates (raise the sweep's top rate)."""
+    pts = sorted(points, key=lambda p: p["offered_rps"])
+    below = next((p for p in pts
+                  if p[key] is not None and p[key] < threshold), None)
+    if below is None:
+        return None
+    above = [p for p in pts if p["offered_rps"] < below["offered_rps"]
+             and p[key] is not None and p[key] >= threshold]
+    return {
+        "threshold": threshold,
+        "last_ok_offered_rps": above[-1]["offered_rps"] if above else None,
+        "last_ok_attainment": above[-1][key] if above else None,
+        "first_saturated_offered_rps": below["offered_rps"],
+        "first_saturated_attainment": below[key],
+    }

@@ -21,44 +21,11 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 
-def _git_revision() -> dict:
-    """Best-effort (commit, dirty) of the repo this file sits in — absent
-    keys rather than a crash when git or the .git dir is unavailable
-    (artifacts get copied around; provenance should survive that)."""
-    import subprocess
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    try:
-        commit = subprocess.run(
-            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
-            text=True, timeout=10, check=True).stdout.strip()
-        dirty = bool(subprocess.run(
-            ["git", "status", "--porcelain"], cwd=root,
-            capture_output=True, text=True, timeout=10,
-            check=True).stdout.strip())
-        return {"git_commit": commit, "git_dirty": dirty}
-    except Exception:
-        return {"git_commit": None, "git_dirty": None}
-
-
-def provenance(seed=None) -> dict:
-    """Shared provenance header for every BENCH_*.json artifact (one
-    definition — serve/calib/spec benches all embed this) so cross-run
-    comparisons of tracked numbers are interpretable: a tokens/s delta
-    means nothing without knowing the jax version, device kind and git
-    revision that produced each side."""
-    import platform
-    dev = jax.devices()[0]
-    return {
-        "jax_version": jax.__version__,
-        "backend": jax.default_backend(),
-        "device_kind": dev.device_kind,
-        "n_devices": jax.device_count(),
-        "python": platform.python_version(),
-        "platform": platform.platform(),
-        "seed": seed,
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-        **_git_revision(),
-    }
+# Shared provenance header for every BENCH_*.json artifact — the
+# definition moved in-package (repro.obs.provenance) so serving code and
+# metrics snapshots embed the same header; re-exported here because the
+# benches import it as `from run import provenance`.
+from repro.obs.provenance import provenance  # noqa: E402, F401
 
 
 def bench_table1():

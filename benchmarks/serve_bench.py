@@ -42,6 +42,8 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from loadgen import (CLASSES, find_knee, make_open_loop_workload,  # noqa: E402
+                     request_slo, slo_summary)
 from run import provenance  # noqa: E402
 
 from repro.configs import get_arch  # noqa: E402
@@ -138,6 +140,42 @@ def run_engine(cfg, params, workload, ecfg, repeats=1):
     return best
 
 
+def run_open_loop(cfg, params, arrivals, ecfg):
+    """One open-loop point: submit each request at its SCHEDULED wall
+    time while the engine steps regardless — the submission rate is an
+    independent variable, unlike the closed-loop runs above where it
+    implicitly tracks the service rate. Returns (slo_summary, metrics).
+    """
+    eng = Engine(cfg, params, ecfg)
+    by_uid = {}
+    i, n = 0, len(arrivals)
+    t0 = time.perf_counter()
+    while i < n or not eng.sched.idle:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i].t <= now:
+            a = arrivals[i]
+            uid = eng.submit(a.prompt, max_new_tokens=a.max_new_tokens)
+            by_uid[uid] = a
+            # backdate to the SCHEDULED arrival: when the engine was busy
+            # stepping past this arrival's time, the request has already
+            # been "waiting" since then — charging the queue from the
+            # submit call instead would hide exactly the queueing delay
+            # the open-loop method exists to measure
+            eng.sched.queue[-1].t_submit = t0 + a.t
+            i += 1
+        if eng.sched.idle:
+            # nothing in flight: sleep toward the next arrival (capped so
+            # late-running generations never oversleep a burst)
+            time.sleep(min(max(arrivals[i].t - now, 0.0), 0.02))
+            continue
+        eng.step()
+    wall = time.perf_counter() - t0
+    fin = sorted(eng.sched.finished, key=lambda r: r.uid)
+    judged = [request_slo(by_uid[r.uid], r) for r in fin]
+    m = eng.metrics()
+    return slo_summary(judged, wall), m
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -155,6 +193,19 @@ def main():
                          "per bucket-rounded chunk and under-fill the "
                          "whole-chunk-or-nothing budget; ~4x the "
                          "prefill_bucket is the sweet spot on the CI box)")
+    ap.add_argument("--open-loop-requests", type=int, default=24,
+                    help="requests per open-loop sweep point (0 disables "
+                         "the open-loop SLO section)")
+    ap.add_argument("--open-loop-rates", default="1,2,4,8,inf",
+                    help="comma-separated base Poisson rates (req/s) to "
+                         "sweep; 'inf' is the all-at-once closed-loop "
+                         "limit that guarantees a measured saturation "
+                         "knee even when the finite rates all keep up")
+    ap.add_argument("--open-loop-seed", type=int, default=7,
+                    help="loadgen seed — same seed reproduces the exact "
+                         "arrival schedule, class draws, and prompts")
+    ap.add_argument("--slo-threshold", type=float, default=0.9,
+                    help="attainment level defining the saturation knee")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: caps requests/repeats/soak so the "
                          "bench (including the tracing-overhead section) "
@@ -168,6 +219,8 @@ def main():
         args.repeats = 1
         args.soak_requests = min(args.soak_requests, 4)
         args.max_len = min(args.max_len, 256)
+        args.open_loop_requests = min(args.open_loop_requests, 8)
+        args.open_loop_rates = "2,inf"
 
     cfg = get_arch(args.arch).reduced()
     model = get_model(cfg)
@@ -302,6 +355,111 @@ def main():
                 agreement(chunk_out, stall_out),
         }
 
+    # ---- metrics registry overhead: the registry is ALWAYS ON (unlike
+    # the tracer, which is a profiling mode), so its hot-path cost must
+    # be indistinguishable from run-to-run noise. Same config twice —
+    # metrics on (the eng8f run above, registry default-enabled) vs
+    # EngineConfig(metrics=False) — and the gap is asserted under
+    # max(1%, the noise floor measured between the two untraced runs).
+    ecfg8f_off = EngineConfig(**{**ecfg8f.__dict__, "metrics": False})
+    run_engine(cfg, params, warm, ecfg8f_off)        # same jit cache, but
+    # INTERLEAVED best-of-N pairs (min 3): the on/off delta is ~0.1% by
+    # microbenchmark (tests/test_metrics.py), far under the box's noise,
+    # so the two sides must sample the same machine regime — reusing the
+    # earlier eng8f wall from a different moment of the run measures the
+    # box, not the registry
+    m_on = m_off = None
+    for _ in range(max(args.repeats, 3)):
+        _, mo = run_engine(cfg, params, workload, ecfg8f)
+        _, mf = run_engine(cfg, params, workload, ecfg8f_off)
+        if m_on is None or mo["tokens_per_s"] > m_on["tokens_per_s"]:
+            m_on = mo
+        if m_off is None or mf["tokens_per_s"] > m_off["tokens_per_s"]:
+            m_off = mf
+    on_tps, off_tps = m_on["tokens_per_s"], m_off["tokens_per_s"]
+    mx_overhead_frac = 1.0 - on_tps / off_tps
+    metrics_overhead = {
+        "metrics_on_tokens_per_s": on_tps,
+        "metrics_off_tokens_per_s": off_tps,
+        "overhead_frac": mx_overhead_frac,
+        "bound_frac": max(0.01, noise_frac),
+    }
+    assert mx_overhead_frac <= max(0.01, noise_frac), (
+        f"always-on metrics registry costs {mx_overhead_frac:.2%} of "
+        f"decode throughput ({on_tps:.1f} vs {off_tps:.1f} tok/s) — above "
+        f"both the 1% budget and the {noise_frac:.2%} noise floor; "
+        f"something landed on the hot path outside the `if mx:` guards")
+
+    # ---- open-loop SLO sweep: offered load is the independent variable;
+    # each point replays a seeded Poisson+burst schedule against the
+    # default serving config and judges every request against its class
+    # SLO (loadgen.CLASSES). The sweep must contain a measured saturation
+    # knee — the 'inf' endpoint (everything at t=0) guarantees one.
+    open_loop = None
+    if args.open_loop_requests:
+        rates = [float(r) for r in args.open_loop_rates.split(",")]
+        ol_ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
+                               kv_mode="int8", prefill_bucket=16)
+        # the 'inf' endpoint gets a 2x-deep queue: it exists to measure
+        # saturation, and a fast box can drain n requests before the
+        # FCFS tail blows its TTFT SLO — doubling the backlog keeps the
+        # closed-loop limit saturating on any box, so the sweep always
+        # contains its knee
+        schedules = {r: make_open_loop_workload(
+            args.open_loop_seed,
+            args.open_loop_requests * (1 if np.isfinite(r) else 2),
+            cfg.vocab, r)
+            for r in rates}
+        # warm every prefill bucket the sweep's prompts will hit (class
+        # draws differ per rate — the arrival process consumes a
+        # rate-dependent number of rng draws — so take the union)
+        ol_reps = {}
+        for sched in schedules.values():
+            for arr in sched:
+                ol_reps.setdefault(
+                    bucket_len(len(arr.prompt), ol_ecfg.prefill_bucket,
+                               args.max_len), (arr.prompt, 8))
+        run_engine(cfg, params, list(ol_reps.values()), ol_ecfg)
+        points = []
+        for r in rates:
+            slo, olm = run_open_loop(cfg, params, schedules[r], ol_ecfg)
+            pt = {
+                "rate_rps": r,
+                # mean effective arrival rate of the MMPP-2 (bursts at
+                # 4x the base rate for 25% of wall time)
+                "offered_rps": r * (1 + (4.0 - 1) * 0.25),
+                "queue_depth_at_submit_p95":
+                    olm["queue_depth_at_submit_p95"],
+                "admit_latency_p95_s": olm["admit_latency_p95_s"],
+                **slo,
+            }
+            points.append(pt)
+            att = pt["slo_attainment"]
+            print(f"open-loop rate {r:>5g} rps: attainment "
+                  f"{'n/a' if att is None else f'{att:.0%}'}, goodput "
+                  f"{pt['goodput_tokens_per_s']:.1f} tok/s, admit p95 "
+                  f"{(pt['admit_latency_p95_s'] or 0) * 1e3:.1f} ms")
+        knee = find_knee(points, args.slo_threshold)
+        inter = [{"offered_rps": p["offered_rps"], "slo_attainment":
+                  p["per_class"]["interactive"]["slo_attainment"]}
+                 for p in points]
+        open_loop = {
+            "seed": args.open_loop_seed,
+            "requests_per_point": args.open_loop_requests,
+            "burst_factor": 4.0,
+            "burst_fraction": 0.25,
+            "slo_threshold": args.slo_threshold,
+            "classes": CLASSES,
+            "points": points,
+            "knee": knee,
+            "knee_interactive": find_knee(inter, args.slo_threshold),
+        }
+
+    def slim(m):
+        # registry snapshots are live-export payloads, not tracked bench
+        # numbers — keep BENCH_serve.json diffable across PRs
+        return {k: v for k, v in m.items() if k != "registry"}
+
     result = {
         "provenance": provenance(seed=7),
         "arch": cfg.name,
@@ -309,9 +467,9 @@ def main():
         "slots": args.slots,
         "max_len": args.max_len,
         "wave": wave,
-        "engine": {k: v for k, v in eng.items()},
-        "engine_int8_kv": {k: v for k, v in eng8.items()},
-        "engine_int8_kv_fused": {k: v for k, v in eng8f.items()},
+        "engine": slim(eng),
+        "engine_int8_kv": slim(eng8),
+        "engine_int8_kv_fused": slim(eng8f),
         "speedup_tokens_per_s": eng["tokens_per_s"] / wave["tokens_per_s"],
         "speedup_fused_vs_materialized_int8":
             eng8f["tokens_per_s"] / eng8["tokens_per_s"],
@@ -319,7 +477,9 @@ def main():
         "greedy_agreement_int8kv_vs_fp": agree_int8_fp,
         "greedy_agreement_fused_vs_materialized": agree_fused,
         "trace": trace,
+        "metrics_overhead": metrics_overhead,
         "soak": soak,
+        "open_loop": open_loop,
     }
 
     def steps(m):
@@ -369,6 +529,22 @@ def main():
               f"{soak['speedup_chunked_vs_oneshot_tokens_per_s']:.2f}x, "
               f"greedy agreement "
               f"{soak['greedy_agreement_chunked_vs_oneshot']:.1%}")
+    print(f"metrics : on {on_tps:.1f} / off {off_tps:.1f} tok/s "
+          f"(overhead {mx_overhead_frac:.2%} <= bound "
+          f"{metrics_overhead['bound_frac']:.2%})")
+    if open_loop:
+        k = open_loop["knee"]
+        if k is None:
+            print(f"open-loop: no saturation knee found (attainment "
+                  f"never dropped below {args.slo_threshold:.0%} — "
+                  f"raise the sweep's top rate)")
+        else:
+            lo = k["last_ok_offered_rps"]
+            print(f"open-loop knee: attainment holds >= "
+                  f"{k['threshold']:.0%} up to "
+                  f"{'n/a' if lo is None else f'{lo:g} rps'} offered, "
+                  f"saturates at {k['first_saturated_offered_rps']:g} rps "
+                  f"({k['first_saturated_attainment']:.0%})")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, default=str)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -188,6 +188,29 @@ class EngineConfig:
                                         # dequant-matmul. False keeps the
                                         # draft packed (memory-bound
                                         # deployments with the kernel)
+    metrics: bool = True                # always-ON metrics registry
+                                        # (repro.obs.metrics, DESIGN.md
+                                        # §11): monotonic counters /
+                                        # gauges / fixed-bucket
+                                        # histograms over the queueing
+                                        # signals (queue depth, admit
+                                        # latency, slot occupancy,
+                                        # prefill backlog, tokens in
+                                        # flight, spec-acceptance EWMA).
+                                        # Unlike trace, this is bounded-
+                                        # memory and cheap enough to
+                                        # never turn off — overhead is
+                                        # asserted within the serve-
+                                        # bench noise floor (≤1%).
+                                        # False exists for that
+                                        # overhead measurement
+    metrics_kv_every: int = 0           # >0: sample KV clip-fraction /
+                                        # occupancy gauges from live
+                                        # int8 cache rows every N steps
+                                        # (kvcache.kv_quality_counters —
+                                        # a bounded host transfer, so
+                                        # NOT free; keep the period
+                                        # coarse in production)
     trace: bool = False                 # default-OFF observability
                                         # (repro.obs, DESIGN.md §10):
                                         # lifecycle events + per-step
@@ -228,7 +251,7 @@ class Engine:
                  rng: Optional[jax.Array] = None,
                  clock=time.perf_counter,
                  kv_scales: Optional[dict] = None,
-                 draft_params=None, tracer=None):
+                 draft_params=None, tracer=None, registry=None):
         if cfg.family not in ENGINE_FAMILIES:
             raise NotImplementedError(
                 f"engine serves transformer families {ENGINE_FAMILIES}, "
@@ -261,8 +284,64 @@ class Engine:
                                   "kv_mode": ecfg.kv_mode,
                                   "prefill_chunk": ecfg.prefill_chunk})
         self.tracer = tracer if tracer else None
+        # --- always-on metrics registry (obs.metrics, DESIGN.md §11) ----
+        # an explicit registry wins (shared across engines / exported by
+        # a server); else ecfg.metrics mints a private one. Instruments
+        # resolve ONCE here so the hot path is attribute ops behind a
+        # single `if mx:` branch; ecfg.metrics=False leaves mx None —
+        # the configuration the overhead assertion measures against.
+        self.registry = None
+        self._mx = None
+        if registry is not None or ecfg.metrics:
+            from repro.obs.metrics import MetricsRegistry
+            self.registry = registry if registry is not None \
+                else MetricsRegistry()
+            r = self.registry
+            self._mx = {
+                "steps": r.counter("engine_steps", "Engine.step() calls"),
+                "decode_steps": r.counter(
+                    "engine_decode_steps", "batched plain-decode steps"),
+                "spec_steps": r.counter(
+                    "engine_spec_steps", "speculative decode steps"),
+                "tokens": r.counter(
+                    "engine_tokens_generated", "committed output tokens"),
+                "prefill_tokens": r.counter(
+                    "engine_prefill_tokens", "prompt tokens prefilled"),
+                "prefill_chunks": r.counter(
+                    "engine_prefill_chunks", "fused prefill chunks run"),
+                "step_s": r.histogram(
+                    "engine_step_seconds", "full Engine.step() wall"),
+                "decode_s": r.histogram(
+                    "engine_decode_step_seconds",
+                    "batched decode dispatch + device + sample"),
+                "occupancy": r.gauge(
+                    "engine_slot_occupancy",
+                    "occupied slots (decoding + mid-prefill) / n_slots"),
+                "decoding": r.gauge(
+                    "engine_slots_decoding", "slots in the decode batch"),
+                "backlog": r.gauge(
+                    "engine_prefill_backlog_chunks",
+                    "prompt chunks still to stream for mid-prefill slots"),
+                "in_flight": r.gauge(
+                    "engine_tokens_in_flight",
+                    "unexhausted generation budget across occupied slots"),
+            }
+            if ecfg.spec_k:
+                self._mx["accept_ewma"] = r.gauge(
+                    "spec_accept_ewma",
+                    "EWMA of per-verify draft-token acceptance fraction")
+            if ecfg.metrics_kv_every:
+                for side in ("k", "v"):
+                    self._mx[f"kv_{side}_clip"] = r.gauge(
+                        f"kv_{side}_clip_frac",
+                        f"sampled {side.upper()}-cache code saturation "
+                        f"(static scale drifted narrow when trending up)")
+                    self._mx[f"kv_{side}_occ"] = r.gauge(
+                        f"kv_{side}_occupancy",
+                        f"sampled {side.upper()}-cache code-range use "
+                        f"(scale drifted wide when trending down)")
         self.sched = Scheduler(ecfg.n_slots, clock=clock,
-                               tracer=self.tracer)
+                               tracer=self.tracer, registry=self.registry)
         self.cache = init_slot_cache(
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
             dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks,
@@ -290,7 +369,8 @@ class Engine:
                                                cfg)
                     if ecfg.draft_recipe else params)
             self._spec = spec_mod.SpecDecoder(cfg, ecfg, draft_params,
-                                              tracer=self.tracer)
+                                              tracer=self.tracer,
+                                              registry=self.registry)
             self._verify = spec_mod.jitted_verify(cfg)
         # host-side slot state
         N = ecfg.n_slots
@@ -388,6 +468,8 @@ class Engine:
             self._retire(slot, "eos")
             return
         req.out.append(first)
+        if self._mx:
+            self._mx["tokens"].inc()
         self._last_tok[slot] = first
         self._pos[slot] = S
         if len(req.out) >= req.max_new_tokens:
@@ -496,6 +578,8 @@ class Engine:
                 jax.block_until_ready(logits)
                 wait_s = tr.now() - t_w
             self.n_prefill_chunks += 1
+            if self._mx:
+                self._mx["prefill_chunks"].inc()
             budget -= n
             spent += n
             done += n
@@ -532,6 +616,7 @@ class Engine:
         Sq = k + 1
         N = self.ecfg.n_slots
         pos0 = self._pos.copy()
+        commit0 = self.n_spec_commit_tokens
         t0 = self.clock()
         # per-slot window lengths: 0 parks the slot through the draft
         # pass (idle / mid-prefill), w >= 1 for decoding slots
@@ -601,6 +686,11 @@ class Engine:
         self.n_spec_steps += 1
         self.spec_step_s.append(self.clock() - t0)
         self.sched.note_step(len(active))
+        if self._mx:
+            self._mx["spec_steps"].inc()
+            self._mx["tokens"].inc(self.n_spec_commit_tokens - commit0)
+            if self.sched.accept_ewma is not None:
+                self._mx["accept_ewma"].set(self.sched.accept_ewma)
 
     def step(self) -> list[EngineRequest]:
         """Admit + (chunk-budgeted) prefill + one batched decode step.
@@ -673,11 +763,16 @@ class Engine:
             self.n_decode_steps += 1
             # toks is on host here, so this brackets the real per-step
             # decode latency (dispatch + device compute + sample)
-            self.decode_step_s.append(self.clock() - t0)
+            dt = self.clock() - t0
+            self.decode_step_s.append(dt)
+            if self._mx:
+                self._mx["decode_steps"].inc()
+                self._mx["decode_s"].observe(dt)
             if tr:
                 tr.span_end("decode", t_span, slots=len(active),
                             dispatch_s=t_w - t0, wait_s=tr.now() - t_w)
             t_c = tr.begin() if tr else 0.0
+            emitted = 0
             for slot in active:
                 req = self.sched.slots[slot]
                 t = int(toks[slot])
@@ -686,12 +781,15 @@ class Engine:
                     self._retire(slot, "eos")
                     continue
                 req.out.append(t)
+                emitted += 1
                 self._last_tok[slot] = t
                 if len(req.out) >= req.max_new_tokens:
                     self._retire(slot, "budget")
                 elif self._pos[slot] >= self.ecfg.max_len:
                     self._retire(slot, "max_len")
             self.sched.note_step(len(active))
+            if self._mx:
+                self._mx["tokens"].inc(emitted)
             if tr:
                 tr.span_end("accept_commit", t_c, slots=len(active))
         tr = self.tracer
@@ -706,6 +804,42 @@ class Engine:
         self.step_s.append(self.clock() - t_step0)
         self.step_prefill_tokens.append(prefill_tokens)
         self.step_decode_slots.append(n_decoding_before)
+        mx = self._mx
+        if mx:
+            # end-of-step queueing gauges: O(n_slots) host bookkeeping,
+            # no device traffic — the always-on cost the ≤1% overhead
+            # bound covers
+            mx["steps"].inc()
+            mx["step_s"].observe(self.step_s[-1])
+            if prefill_tokens:
+                mx["prefill_tokens"].inc(prefill_tokens)
+            occupied = in_flight = 0
+            for r in self.sched.slots:
+                if r is not None:
+                    occupied += 1
+                    in_flight += max(0, r.max_new_tokens - len(r.out))
+            backlog = 0
+            if self.ecfg.prefill_chunk:
+                for s in self.sched.prefill_slots():
+                    rem = len(self.sched.slots[s].prompt) \
+                        - int(self._prefill_prog[s])
+                    backlog += -(-rem // self.ecfg.prefill_chunk)
+            mx["occupancy"].set(occupied / self.ecfg.n_slots)
+            mx["decoding"].set(len(self.sched.active_slots()))
+            mx["backlog"].set(backlog)
+            mx["in_flight"].set(in_flight)
+            if self.ecfg.metrics_kv_every and self.cache.mode == "int8" \
+                    and len(self.step_s) % self.ecfg.metrics_kv_every == 0:
+                # periodic KV quality gauges: bounded host transfer of
+                # live cache rows (kvcache.kv_quality_counters) — the
+                # one metrics signal that is NOT free, which is why it
+                # has its own period and defaults off
+                from .kvcache import kv_quality_counters
+                kc = kv_quality_counters(self.cache)
+                for side in ("k", "v"):
+                    if kc.get(f"{side}_clip_frac") is not None:
+                        mx[f"kv_{side}_clip"].set(kc[f"{side}_clip_frac"])
+                        mx[f"kv_{side}_occ"].set(kc[f"{side}_occupancy"])
         if tr:
             tr.span_end("step", t_step0,
                         prefill_tokens=prefill_tokens,
@@ -761,6 +895,9 @@ class Engine:
                 "spec_step_p50_s": p(sstep, 50),
                 "spec_step_p95_s": p(sstep, 95),
                 "spec_by_slot": [list(x) for x in self.sched.spec_by_slot],
+                # live acceptance gauge: EWMA over per-verify fractions —
+                # tracks recent drift the cumulative rate smooths away
+                "acceptance_ewma": self.sched.accept_ewma,
             }
         out = {
             "n_finished": len(fin),
@@ -773,6 +910,16 @@ class Engine:
             "prefill_chunk": self.ecfg.prefill_chunk,
             "slot_utilization": self.sched.utilization(),
             "queue_depth_max": max(self.sched.queue_depth_hist, default=0),
+            # always-on queueing signals (scheduler records these at
+            # submit/admit time with or without a tracer — obs.summary
+            # keeps the None-on-empty convention)
+            "queue_depth_at_submit_p50": p(self.sched.queue_depth_submit,
+                                           50),
+            "queue_depth_at_submit_p95": p(self.sched.queue_depth_submit,
+                                           95),
+            "admit_latency_mean_s": mean(self.sched.admit_latency_s),
+            "admit_latency_p50_s": p(self.sched.admit_latency_s, 50),
+            "admit_latency_p95_s": p(self.sched.admit_latency_s, 95),
             "ttft_mean_s": mean(ttfts),
             "ttft_p50_s": p(ttfts, 50),
             "ttft_p95_s": p(ttfts, 95),
@@ -793,6 +940,12 @@ class Engine:
             "kv_bytes_per_token": self.cache.bytes_per_token(),
             **spec,
         }
+        if self.registry is not None:
+            # the always-on registry snapshot rides along so one
+            # metrics() call is the full observability surface (the
+            # same dict SnapshotWriter streams and to_prometheus
+            # renders)
+            out["registry"] = self.registry.snapshot()
         if self.tracer:
             # traced engines embed the phase-attribution summary so every
             # metrics consumer (serve.py --metrics-json, the benchmarks)

@@ -50,7 +50,8 @@ class EngineRequest:
 class Scheduler:
     """FCFS queue + fixed slot pool."""
 
-    def __init__(self, n_slots: int, clock=time.perf_counter, tracer=None):
+    def __init__(self, n_slots: int, clock=time.perf_counter, tracer=None,
+                 registry=None):
         self.n_slots = n_slots
         self.clock = clock
         # lifecycle-event sink (obs.Tracer); the scheduler owns the
@@ -60,6 +61,37 @@ class Scheduler:
         self.queue: collections.deque[EngineRequest] = collections.deque()
         self.slots: list[Optional[EngineRequest]] = [None] * n_slots
         self.finished: list[EngineRequest] = []
+        # always-on queueing signals (recorded with or without a tracer:
+        # admission control and the open-loop SLO bench need them on
+        # every run, and they are O(1) appends at submit/admit time —
+        # the tracer only cannot provide them when it is off)
+        self.admit_latency_s: list[float] = []   # submit -> slot placement
+        self.queue_depth_submit: list[int] = []  # depth seen by each submit
+        # optional always-on metrics registry (obs.metrics): queueing
+        # gauges + admit-latency histogram, shared with the engine
+        self._mx = None
+        if registry is not None:
+            from repro.obs.metrics import DEPTH_BUCKETS
+            self._mx = {
+                "submitted": registry.counter(
+                    "sched_requests_submitted",
+                    "requests entering the FCFS queue"),
+                "admitted": registry.counter(
+                    "sched_requests_admitted",
+                    "requests placed into a slot"),
+                "retired": registry.counter(
+                    "sched_requests_retired", "requests finished"),
+                "depth": registry.gauge(
+                    "sched_queue_depth",
+                    "requests waiting for a slot"),
+                "depth_hist": registry.histogram(
+                    "sched_queue_depth_at_submit",
+                    "queue depth seen by each arriving request",
+                    buckets=DEPTH_BUCKETS),
+                "admit_latency": registry.histogram(
+                    "sched_admit_latency_seconds",
+                    "submit -> slot placement wait"),
+            }
         # slots admitted but not fully prefilled yet (chunked-prefill
         # engines): they hold their request (the slot is occupied) but are
         # NOT active for decode — a mid-prefill slot must stay invisible
@@ -78,12 +110,22 @@ class Scheduler:
         self.spec_accepted = 0
         self.accept_hist: list[int] = []
         self.spec_by_slot: list[list[int]] = [[0, 0] for _ in range(n_slots)]
+        # EWMA of the per-verify acceptance fraction — the live gauge a
+        # dashboard watches (the cumulative rate hides recent drift);
+        # None until the first verify with proposed > 0
+        self.accept_ewma: Optional[float] = None
+        self.accept_ewma_alpha = 0.1
 
     # ------------------------------------------------------------ intake --
     def submit(self, req: EngineRequest) -> EngineRequest:
         req.t_submit = self.clock()
         self.queue.append(req)
         self.n_submitted += 1
+        self.queue_depth_submit.append(len(self.queue))
+        if self._mx:
+            self._mx["submitted"].inc()
+            self._mx["depth"].set(len(self.queue))
+            self._mx["depth_hist"].observe(len(self.queue))
         if self.tracer:
             self.tracer.event("submit", uid=req.uid,
                               prompt_len=int(len(req.prompt)),
@@ -126,11 +168,17 @@ class Scheduler:
             self.slots[slot] = req
             self.n_admitted += 1
             placed.append((slot, req))
+            queued_s = self.clock() - req.t_submit
+            self.admit_latency_s.append(queued_s)
+            if self._mx:
+                self._mx["admitted"].inc()
+                self._mx["admit_latency"].observe(queued_s)
             if self.tracer:
                 self.tracer.event(
-                    "admit", uid=req.uid, slot=slot,
-                    queued_s=self.clock() - req.t_submit)
+                    "admit", uid=req.uid, slot=slot, queued_s=queued_s)
         self.queue_depth_hist.append(len(self.queue))
+        if self._mx:
+            self._mx["depth"].set(len(self.queue))
         return placed
 
     def retire(self, slot: int, reason: str = "eos") -> EngineRequest:
@@ -146,6 +194,8 @@ class Scheduler:
         if slot in self._prefilling:            # retired mid-prefill (eos
             self._prefilling.remove(slot)       # on first token, 0 budget)
         self.finished.append(req)
+        if self._mx:
+            self._mx["retired"].inc()
         if self.tracer:
             self.tracer.event("retire", uid=req.uid, slot=slot,
                               reason=reason, n_out=len(req.out))
@@ -178,6 +228,11 @@ class Scheduler:
         self.accept_hist.append(accepted)
         self.spec_by_slot[slot][0] += proposed
         self.spec_by_slot[slot][1] += accepted
+        if proposed:                            # w=1 verifies propose 0 —
+            rate = accepted / proposed          # no acceptance signal
+            a = self.accept_ewma_alpha
+            self.accept_ewma = rate if self.accept_ewma is None else \
+                (1 - a) * self.accept_ewma + a * rate
 
     def acceptance_rate(self) -> Optional[float]:
         """Fraction of proposed draft tokens the target accepted."""

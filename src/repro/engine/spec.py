@@ -41,6 +41,7 @@ never speculated.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -122,7 +123,8 @@ class SpecDecoder:
     draft keeps the scale mode that needs no extra calibration artifact.
     """
 
-    def __init__(self, cfg, ecfg, draft_params, tracer=None):
+    def __init__(self, cfg, ecfg, draft_params, tracer=None,
+                 registry=None):
         from repro.models.common import dtype_of
         self.cfg = cfg
         self.ecfg = ecfg
@@ -130,6 +132,18 @@ class SpecDecoder:
         # obs.Tracer (falsy → None): the draft pass emits one aggregated
         # "draft" span per engine step with dispatch/wait attribution
         self.tracer = tracer if tracer else None
+        # always-on draft-side instruments (obs.metrics): the engine
+        # shares its registry so the draft's dispatch volume and wall
+        # share live alongside the queueing gauges
+        self._mx = None
+        if registry is not None:
+            self._mx = {
+                "steps": registry.counter(
+                    "spec_draft_steps", "batched draft decode dispatches"),
+                "draft_s": registry.histogram(
+                    "spec_draft_pass_seconds",
+                    "whole per-engine-step draft pass (all iterations)"),
+            }
         if ecfg.draft_dequantize:
             # one-time expansion of packed SplitQuantTensors into the
             # compute dtype: every draft decode step would otherwise
@@ -202,7 +216,9 @@ class SpecDecoder:
         steps = np.asarray(steps)
         drafts = np.zeros((self.k, N), np.int32)
         tr = self.tracer
+        mx = self._mx
         t_span = tr.begin() if tr else 0.0
+        t_pass = time.perf_counter() if mx else 0.0
         dispatch_s = wait_s = 0.0
         n_iter = int(steps.max())
         for j in range(n_iter):
@@ -222,6 +238,9 @@ class SpecDecoder:
             adv = (j + 1) < steps
             cur_tok = np.where(adv, toks, cur_tok).astype(np.int32)
             cur_pos = np.where(adv, cur_pos + 1, cur_pos).astype(np.int32)
+        if mx:
+            mx["steps"].inc(n_iter)
+            mx["draft_s"].observe(time.perf_counter() - t_pass)
         if tr:
             tr.span_end("draft", t_span, iters=n_iter,
                         dispatch_s=dispatch_s, wait_s=wait_s)

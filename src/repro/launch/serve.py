@@ -164,9 +164,32 @@ def main():
                          "engine steps into the trace. 0 = off")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump the full Engine.metrics() dict as JSON "
+                         "with the shared provenance header "
                          "(machine-checkable soak runs; includes the "
+                         "always-on registry snapshot, and the "
                          "phase_attribution section when --trace is on). "
                          "Engine only (not --wave)")
+    ap.add_argument("--metrics-snapshot", default=None, metavar="PATH",
+                    help="stream periodic JSONL snapshots of the "
+                         "always-on metrics registry (queue depth, admit "
+                         "latency, slot occupancy, prefill backlog, "
+                         "tokens in flight, spec acceptance EWMA) to "
+                         "this path while serving; line 1 is the shared "
+                         "provenance header. Engine only (not --wave)")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    metavar="S",
+                    help="with --metrics-snapshot: minimum seconds "
+                         "between snapshots (a final flush always "
+                         "happens at drain)")
+    ap.add_argument("--metrics-prom", default=None, metavar="PATH",
+                    help="write the final registry state in Prometheus "
+                         "text exposition format at exit (the scrape "
+                         "surface, minus the HTTP listener). Engine "
+                         "only (not --wave)")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable the always-on metrics registry (the "
+                         "overhead-measurement configuration; metrics "
+                         "are otherwise cheap enough to never turn off)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     ap.add_argument("--recipe", default=None,
@@ -246,13 +269,20 @@ def main():
         print(f"note: {cfg.family!r} family has no slot-cache layout yet; "
               f"serving with the wave loop")
         args.wave = True
-    if args.wave and (args.trace or args.metrics_json):
+    if args.no_metrics and (args.metrics_snapshot or args.metrics_prom):
+        raise ValueError(
+            "--no-metrics disables the registry the "
+            "--metrics-snapshot/--metrics-prom exporters read — drop "
+            "one side")
+    if args.wave and (args.trace or args.metrics_json
+                      or args.metrics_snapshot or args.metrics_prom):
         # loud, mirroring the spec_k check above: the wave loop has no
-        # tracer or metrics dict, and silently dropping the flags would
-        # let an operator believe they captured a trace
+        # tracer, registry, or metrics dict, and silently dropping the
+        # flags would let an operator believe they captured a trace
         raise NotImplementedError(
-            "--trace/--metrics-json are engine features — the wave loop "
-            "has no tracer or metrics() snapshot; drop --wave")
+            "--trace/--metrics-json/--metrics-snapshot/--metrics-prom "
+            "are engine features — the wave loop has no tracer, "
+            "registry, or metrics() snapshot; drop --wave")
     if args.wave:
         srv = Server(cfg, params, ServeConfig(
             max_batch=args.slots, max_new_tokens=args.max_new_tokens,
@@ -267,12 +297,32 @@ def main():
         max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
         kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
         prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
-        draft_recipe=args.draft_recipe, trace=bool(args.trace),
-        trace_kv_every=args.trace_kv_every),
+        draft_recipe=args.draft_recipe, metrics=not args.no_metrics,
+        trace=bool(args.trace), trace_kv_every=args.trace_kv_every),
         kv_scales=kv_scales)
+    writer = None
+    if args.metrics_snapshot:
+        from repro.kernels import act_quant
+        from repro.obs import RegistryQuantProbe, SnapshotWriter
+        writer = SnapshotWriter(args.metrics_snapshot, eng.registry,
+                                interval_s=args.metrics_interval)
+        # live act-quant clip-fraction gauges: the observed kernel
+        # wrappers feed the registry through the existing probe hook
+        act_quant.set_quality_probe(RegistryQuantProbe(eng.registry))
     for p in prompts:
         eng.submit(p)
-    for r in eng.drain():
+    if writer is None:
+        fin = eng.drain()
+    else:
+        # step manually so snapshots land DURING the run (the point of
+        # an open-ended soak), not just at drain
+        fin = []
+        while not eng.sched.idle:
+            eng.step()
+            writer.maybe_write()
+        writer.write()                            # final flush
+        fin = sorted(eng.sched.finished, key=lambda r: r.uid)
+    for r in fin:
         print(f"req {r.uid}: {len(r.out)} tokens -> {r.out[:12]}  "
               f"(ttft {r.ttft*1e3:.0f} ms, {r.tokens_per_s:.1f} tok/s)")
     m = eng.metrics()
@@ -301,10 +351,23 @@ def main():
                   f"step wall; dispatch {pa['dispatch_frac']:.0%} / "
                   f"device wait {pa['device_wait_frac']:.0%} of "
                   f"attributed time")
+    if args.metrics_snapshot:
+        print(f"metrics: {writer.seq} snapshots -> "
+              f"{args.metrics_snapshot}")
+    if args.metrics_prom:
+        with open(args.metrics_prom, "w") as f:
+            f.write(eng.registry.to_prometheus())
+        print(f"metrics: prometheus text -> {args.metrics_prom}")
     if args.metrics_json:
         import json
+
+        from repro.obs import provenance
+
+        # the same provenance header every BENCH_*.json carries — a
+        # metrics dump without it is uninterpretable once copied off-box
         with open(args.metrics_json, "w") as f:
-            json.dump(m, f, indent=2, default=float)
+            json.dump({"provenance": provenance(), **m}, f, indent=2,
+                      default=float)
         print(f"metrics: -> {args.metrics_json}")
 
 

@@ -154,6 +154,27 @@ def main(argv=None) -> int:
     print(f"{args.trace}: {len(records) - 1} records, schema "
           f"{head.get('schema')}, dropped {head.get('dropped', 0)}"
           + (f", arch {head['arch']}" if "arch" in head else ""))
+    dropped = int(head.get("dropped", 0) or 0)
+    if dropped:
+        # loud, not a status field: a ring-buffer overflow silently
+        # truncates the OLDEST records, so every aggregate below (phase
+        # fractions, coverage, lifecycle percentiles, waterfalls) is
+        # computed over the tail of the run only — early prefill-heavy
+        # steps are the usual casualties, which skews phase attribution
+        # toward decode
+        kept = max(len(records) - 1, 0)
+        print(f"\n{'!' * 72}\n"
+              f"!! WARNING: {dropped} trace records DROPPED (ring buffer "
+              f"overflow; {kept} kept).\n"
+              f"!! The oldest records are missing — phase attribution, "
+              f"coverage, and\n"
+              f"!! lifecycle percentiles below describe only the tail of "
+              f"the run.\n"
+              f"!! Re-trace with a larger EngineConfig.trace_capacity "
+              f"(currently\n"
+              f"!! {head.get('capacity', '?')}) or a shorter run for "
+              f"trustworthy attribution.\n"
+              f"{'!' * 72}")
     errs = validate_events(records)
     if errs:
         print(f"\nschema validation: {len(errs)} error(s)")

@@ -5,8 +5,16 @@ and exports JSONL + Chrome ``trace.json``; `schema` is the phase/
 lifecycle vocabulary and validator; `report` aggregates traces into the
 phase-breakdown / waterfall views; `summary` is the shared
 percentile-with-empty-guard math every metrics consumer reuses;
-`quality` holds the quantization-quality counters.
+`quality` holds the quantization-quality counters; `metrics` is the
+always-on registry (counters/gauges/histograms, Prometheus + JSONL
+snapshot export, DESIGN.md §11) and `provenance` the shared artifact
+header.
 """
+from repro.obs.metrics import (DEPTH_BUCKETS, LATENCY_BUCKETS_S, Counter,
+                               Gauge, Histogram, MetricsRegistry,
+                               RegistryQuantProbe, SnapshotWriter,
+                               default_registry, load_snapshots)
+from repro.obs.provenance import provenance
 from repro.obs.quality import ActQuantProbe, code_stats, span_stats
 from repro.obs.report import (lifecycle_summary, phase_breakdown,
                               request_waterfalls)
@@ -22,4 +30,8 @@ __all__ = [
     "phase_breakdown", "request_waterfalls", "lifecycle_summary",
     "pct", "mean", "summarize", "token_agreement",
     "ActQuantProbe", "code_stats", "span_stats",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "SnapshotWriter", "RegistryQuantProbe", "default_registry",
+    "load_snapshots", "LATENCY_BUCKETS_S", "DEPTH_BUCKETS",
+    "provenance",
 ]

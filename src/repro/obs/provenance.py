@@ -1,0 +1,55 @@
+"""Shared provenance header for every serialized metrics artifact.
+
+One definition feeds BENCH_serve/calib/spec.json (via
+`benchmarks/run.py:provenance`, which re-exports this), `serve.py
+--metrics-json`, and `obs.metrics.SnapshotWriter` headers — a tokens/s
+delta or a clip-fraction trend means nothing without the jax version,
+device kind and git revision that produced each side. Lived in
+benchmarks/ through PR 6; moved under `repro.obs` so in-tree serving
+code can embed it without reaching outside the package.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+
+def git_revision(root: str | None = None) -> dict:
+    """Best-effort (commit, dirty) of the repo this package sits in —
+    None values rather than a crash when git or the .git dir is
+    unavailable (artifacts get copied around; provenance should survive
+    that)."""
+    import subprocess
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip())
+        return {"git_commit": commit, "git_dirty": dirty}
+    except Exception:
+        return {"git_commit": None, "git_dirty": None}
+
+
+def provenance(seed=None) -> dict:
+    """Environment + revision header embedded in every artifact."""
+    import platform
+
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "seed": seed,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        **git_revision(),
+    }
