@@ -71,6 +71,15 @@ GATES = [
     Gate("BENCH_serve.json", "soak.greedy_agreement_chunked_vs_oneshot",
          "floor", floor=0.999),
     Gate("BENCH_serve.json", "trace.coverage", "floor", floor=0.9),
+    # overload robustness (DESIGN.md §12): shedding batch-class work
+    # past the knee must never cost SLO-attaining tokens — the ratio is
+    # an absolute floor (admission control that loses goodput is worse
+    # than none), the shed-on goodput itself tracks noise-aware
+    Gate("BENCH_serve.json",
+         "open_loop.overload.goodput_ratio_shed_on_vs_off",
+         "floor", floor=1.0),
+    Gate("BENCH_serve.json",
+         "open_loop.overload.shed_on.goodput_tokens_per_s", "higher"),
     # calibration: static-scale decode win + first-token faithfulness
     Gate("BENCH_calib.json", "static_kv_decode.static_speedup",
          "higher"),

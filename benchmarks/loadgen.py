@@ -55,12 +55,24 @@ CLASSES: dict[str, dict] = {
 @dataclasses.dataclass
 class Arrival:
     """One scheduled request: arrival time (s since schedule start),
-    class name, prompt token ids, and generation budget."""
+    class name, prompt token ids, and generation budget — plus the
+    optional fault-tolerance fields (DESIGN.md §12): a scheduled
+    client-side cancellation time and per-request deadlines the engine
+    enforces at step boundaries. All None by default so schedules
+    generated without the robustness options stay byte-identical to
+    pre-§12 ones."""
 
     t: float
     cls: str
     prompt: np.ndarray
     max_new_tokens: int
+    #: absolute schedule time (same axis as ``t``) at which the client
+    #: cancels this request; None = never
+    cancel_t: Optional[float] = None
+    #: wall-clock deadlines relative to submission (Engine.submit
+    #: kwargs); None = no deadline
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
 
 
 def poisson_burst_times(rng: np.random.Generator, n: int, rate: float,
@@ -107,11 +119,31 @@ def poisson_burst_times(rng: np.random.Generator, n: int, rate: float,
 def make_open_loop_workload(seed: int, n: int, vocab: int, rate: float,
                             classes: Optional[dict] = None,
                             burst_factor: float = 4.0,
-                            burst_fraction: float = 0.25) \
+                            burst_fraction: float = 0.25,
+                            cancel_rate: float = 0.0,
+                            cancel_after_s: tuple = (0.05, 0.5),
+                            deadlines: bool = False,
+                            deadline_factor: float = 8.0) \
         -> list[Arrival]:
     """The full deterministic schedule: arrival times + class draws +
     prompts + budgets from one seeded rng. Same (seed, n, vocab, rate,
-    …) ⇒ identical schedule, byte for byte."""
+    …) ⇒ identical schedule, byte for byte.
+
+    Robustness options (DESIGN.md §12), both default-off so the base
+    schedule is unchanged byte for byte (the extra rng draws happen
+    AFTER the base draws, so enabling them never perturbs arrival
+    times, prompts, or budgets of the same seed):
+
+    * ``cancel_rate`` — each request independently gets a scheduled
+      client cancellation with this probability, at a uniform delay in
+      ``cancel_after_s`` after its arrival (disconnects cluster shortly
+      after submit: the user gave up waiting).
+    * ``deadlines`` — stamp per-request TTFT/total deadlines derived
+      from the class SLOs: ``ttft_deadline_s = ttft_slo_s ×
+      deadline_factor`` and ``deadline_s`` adds the budgeted decode
+      time at the TPOT SLO, also × factor. Deterministic (no rng) —
+      deadline enforcement changes which requests FINISH, and seeding
+      that through the schedule would conflate policy with workload."""
     classes = classes or CLASSES
     rng = np.random.default_rng(seed)
     times = poisson_burst_times(rng, n, rate, burst_factor,
@@ -130,6 +162,22 @@ def make_open_loop_workload(seed: int, n: int, vocab: int, rate: float,
                            prompt=rng.integers(0, vocab, size=plen,
                                                dtype=np.int64),
                            max_new_tokens=budget))
+    if cancel_rate > 0:
+        # drawn after (and only after) the base schedule: same-seed
+        # byte-identity of the base fields is preserved for any
+        # cancel_rate, including comparing cancel-on vs cancel-off runs
+        # on the same arrivals
+        hit = rng.uniform(size=n) < cancel_rate
+        delay = rng.uniform(cancel_after_s[0], cancel_after_s[1], size=n)
+        for i, a in enumerate(out):
+            if hit[i]:
+                a.cancel_t = a.t + float(delay[i])
+    if deadlines:
+        for a in out:
+            spec = classes[a.cls]
+            a.ttft_deadline_s = spec["ttft_slo_s"] * deadline_factor
+            a.deadline_s = (spec["ttft_slo_s"] + a.max_new_tokens
+                            * spec["tpot_slo_s"]) * deadline_factor
     return out
 
 

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import sys
 import time
 from typing import Optional
 
@@ -49,9 +50,10 @@ import numpy as np
 
 from repro.models import get_model
 
+from .faults import DegradationLadder, FaultInjector, StepFailure
 from .kvcache import clear_slot, init_slot_cache, rollback_slot, \
     write_prefill
-from .scheduler import EngineRequest, Scheduler
+from .scheduler import EngineRequest, Scheduler, SubmitError
 
 ENGINE_FAMILIES = ("dense", "moe", "vlm")
 
@@ -229,6 +231,46 @@ class EngineConfig:
                                         # histogram) every N steps — a
                                         # host transfer of live cache
                                         # rows, traced-mode cost only
+    # --- fault tolerance (DESIGN.md §12) -------------------------------
+    max_queue: int = 0                  # >0: bounded submit queue; an
+                                        # arrival into a full queue
+                                        # triggers overload_policy. 0 =
+                                        # unbounded (historical behavior).
+                                        # The production set point comes
+                                        # from the measured saturation
+                                        # knee (scheduler.
+                                        # admission_set_point)
+    overload_policy: str = "reject-new" # full-queue victim choice:
+                                        # "reject-new" | "shed-oldest" |
+                                        # "shed-by-class" (oldest queued
+                                        # batch-class request first)
+    degrade: bool = False               # graceful-degradation ladder:
+                                        # under sustained backlog disable
+                                        # speculation (rung 1, output-
+                                        # identical), defer batch-class
+                                        # admissions (rung 2), shed
+                                        # queued load (rung 3); each rung
+                                        # change is a metrics event
+    degrade_thresholds: tuple = ()      # 3 ascending pressure bounds
+                                        # (queue depth + prefill backlog
+                                        # chunks) for rungs 1..3; () →
+                                        # (N, 2N, 4N) slots-scaled default
+    degrade_patience: int = 2           # consecutive steps a threshold
+                                        # crossing must persist before
+                                        # the rung moves (hysteresis;
+                                        # descent takes 2x)
+    max_retries: int = 2                # per-slot consecutive-failure
+                                        # budget for step retry; one more
+                                        # failure quarantines the slot's
+                                        # request as "failed"
+    retry_backoff_s: float = 0.0005     # base for the bounded exponential
+                                        # backoff between retry attempts
+                                        # (doubles per attempt, capped)
+    fault_spec: Optional[object] = None # faults.FaultSpec: seeded
+                                        # synthetic fault injection (chaos
+                                        # testing). None = no injection;
+                                        # the retry/quarantine machinery
+                                        # is always on regardless
 
 
 class Engine:
@@ -325,7 +367,25 @@ class Engine:
                 "in_flight": r.gauge(
                     "engine_tokens_in_flight",
                     "unexhausted generation budget across occupied slots"),
+                "deadline": r.counter(
+                    "engine_deadline_exceeded",
+                    "requests retired by the step-boundary deadline "
+                    "sweep (TTFT or total-wall)"),
+                "retries": r.counter(
+                    "engine_step_retries",
+                    "decode step re-executions after rollback (injected "
+                    "or detected failures)"),
+                "rung": r.gauge(
+                    "engine_degradation_rung",
+                    "current degradation-ladder rung (0 normal, 1 spec "
+                    "off, 2 defer batch, 3 shed)"),
+                "degr_transitions": r.counter(
+                    "engine_degradation_transitions",
+                    "degradation-ladder rung changes"),
             }
+            # rung 0 is a real state, not "unset" — render it from the
+            # start (to_prometheus omits unset gauges)
+            self._mx["rung"].set(0)
             if ecfg.spec_k:
                 self._mx["accept_ewma"] = r.gauge(
                     "spec_accept_ewma",
@@ -341,7 +401,27 @@ class Engine:
                         f"sampled {side.upper()}-cache code-range use "
                         f"(scale drifted wide when trending down)")
         self.sched = Scheduler(ecfg.n_slots, clock=clock,
-                               tracer=self.tracer, registry=self.registry)
+                               tracer=self.tracer, registry=self.registry,
+                               max_queue=ecfg.max_queue,
+                               overload_policy=ecfg.overload_policy)
+        # --- fault tolerance (engine/faults.py, DESIGN.md §12) ----------
+        self._faults = (FaultInjector(ecfg.fault_spec)
+                        if ecfg.fault_spec else None)
+        if self._faults is not None and ecfg.spec_k:
+            raise NotImplementedError(
+                "fault injection targets the plain decode path; the "
+                "speculative path's verify/rollback already exercises "
+                "mid-step recovery and injecting there would need "
+                "draft-cache-aware retry bookkeeping that is not wired "
+                "up — run chaos with spec_k=0 (the ladder's rung-1 "
+                "configuration)")
+        self._ladder = None
+        self._rung = 0
+        if ecfg.degrade:
+            N_ = ecfg.n_slots
+            self._ladder = DegradationLadder(
+                ecfg.degrade_thresholds or (N_, 2 * N_, 4 * N_),
+                patience=ecfg.degrade_patience)
         self.cache = init_slot_cache(
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
             dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks,
@@ -377,7 +457,13 @@ class Engine:
         self._last_tok = np.zeros(N, np.int32)
         self._pos = np.zeros(N, np.int32)
         self._prefill_prog = np.zeros(N, np.int64)   # prompt tokens written
+        # consecutive corrupt-output attempts per slot (step retry);
+        # crossing max_retries quarantines the slot's request as "failed"
+        self._fail_streak = np.zeros(N, np.int64)
         self._uid = 0
+        self._any_deadlines = False      # skip the per-step sweep until
+                                         # a submit carries a deadline
+        self.n_step_retries = 0
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_prefill_chunks = 0
@@ -413,23 +499,102 @@ class Engine:
         # pytree metadata, so the jit cache keys on it
 
     # ------------------------------------------------------------ intake --
-    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
+    def submit(self, prompt, max_new_tokens: Optional[int] = None, *,
+               cls: Optional[str] = None,
+               ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Enqueue a request; returns its uid. Non-blocking — work happens
         in step()/drain(). An explicit max_new_tokens=0 means "no tokens"
-        (the request completes at admission with empty output)."""
+        (the request completes at admission with empty output).
+
+        Validation happens HERE, not deep inside admission: a malformed
+        request raises a structured `SubmitError` (a ValueError) before
+        it consumes queue space — empty prompts, negative budgets, and
+        prompt+budget combinations that cannot fit ``max_len`` (the old
+        behavior silently truncated the budget, which made a request's
+        output length depend on a config it never saw). ``cls`` is the
+        loadgen request class (admission-policy key); the deadlines are
+        wall-clock seconds from submit, enforced at step boundaries.
+
+        Note the bounded queue (ecfg.max_queue) can shed on submit: the
+        uid is still returned and the request lands in ``finished`` with
+        reason "shed" — same lifecycle, it just never held a slot."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if len(prompt) > self.ecfg.max_len:
-            raise ValueError(
-                f"prompt length {len(prompt)} > max_len {self.ecfg.max_len}")
+        if len(prompt) == 0:
+            raise SubmitError("empty_prompt",
+                              "empty prompt (no tokens to prefill)")
         budget = (self.ecfg.max_new_tokens if max_new_tokens is None
                   else max_new_tokens)
+        if budget < 0:
+            raise SubmitError("bad_budget",
+                              f"max_new_tokens must be >= 0, got {budget}")
         if len(prompt) + budget > self.ecfg.max_len:
-            budget = max(1, self.ecfg.max_len - len(prompt))
+            raise SubmitError(
+                "too_long",
+                f"prompt ({len(prompt)}) + max_new_tokens ({budget}) "
+                f"exceeds max_len {self.ecfg.max_len}")
         req = EngineRequest(uid=self._uid, prompt=prompt,
-                            max_new_tokens=budget)
+                            max_new_tokens=budget, cls=cls,
+                            ttft_deadline_s=ttft_deadline_s,
+                            deadline_s=deadline_s)
         self._uid += 1
+        if ttft_deadline_s is not None or deadline_s is not None:
+            self._any_deadlines = True
+        if self._faults is not None:
+            self._faults.note_submit(req.uid)
         self.sched.submit(req)
         return req.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request mid-flight: queued requests finish
+        immediately ("cancelled", never held a slot); slotted requests —
+        including MID-CHUNKED-PREFILL ones — retire through the full
+        slot-release path, so the cache row, draft-cache twin, and
+        prefill bookkeeping all free together. Returns False when the
+        uid is unknown or already finished (cancel is idempotent and
+        racing a natural finish is not an error)."""
+        for req in self.sched.queue:
+            if req.uid == uid:
+                if self.tracer:
+                    self.tracer.event("cancel", uid=uid, slot=-1)
+                self.sched.drop_queued(req, "cancelled")
+                return True
+        for slot, req in enumerate(self.sched.slots):
+            if req is not None and req.uid == uid:
+                if self.tracer:
+                    self.tracer.event("cancel", uid=uid, slot=slot)
+                self._retire(slot, "cancelled")
+                return True
+        return False
+
+    def _deadline_expired(self, req: EngineRequest, now: float) -> bool:
+        if req.t_submit is None:
+            return False
+        waited = now - req.t_submit
+        if req.deadline_s is not None and waited > req.deadline_s:
+            return True
+        return (req.ttft_deadline_s is not None
+                and req.t_first_token is None
+                and waited > req.ttft_deadline_s)
+
+    def _enforce_deadlines(self) -> None:
+        """Step-boundary deadline sweep (DESIGN.md §12): queued requests
+        whose TTFT/total-wall deadline already passed retire as
+        "deadline_exceeded" without ever consuming a slot, and slotted
+        ones (including mid-prefill) free their slot for work that can
+        still make its SLO. Step-boundary granularity is deliberate —
+        mid-step preemption would tear the batched decode dispatch."""
+        now = self.clock()
+        for req in [r for r in self.sched.queue
+                    if self._deadline_expired(r, now)]:
+            self.sched.drop_queued(req, "deadline_exceeded")
+            if self._mx:
+                self._mx["deadline"].inc()
+        for slot, req in enumerate(self.sched.slots):
+            if req is not None and self._deadline_expired(req, now):
+                self._retire(slot, "deadline_exceeded")
+                if self._mx:
+                    self._mx["deadline"].inc()
 
     # ---------------------------------------------------------- sampling --
     def _sample(self, logits):
@@ -692,6 +857,143 @@ class Engine:
             if self.sched.accept_ewma is not None:
                 self._mx["accept_ewma"].set(self.sched.accept_ewma)
 
+    # --------------------------------------- plain decode with retry --
+    def _dispatch_decode(self, n_active: int) -> np.ndarray:
+        """One batched plain-decode dispatch over all N slots; returns
+        the per-slot sampled tokens on host. The decode SPAN opens before
+        staging: the two host->device puts are real per-step decode cost
+        (on small models they rival the matmuls) and must attribute to
+        the phase, not leak into the step span's uncovered remainder. The
+        tracked decode_step_s metric keeps its historical bracket
+        (post-staging t0) so its trend stays comparable across PRs."""
+        tr = self.tracer
+        t_span = tr.begin() if tr else 0.0
+        tokens = jnp.asarray(self._last_tok[:, None])
+        pos = jnp.asarray(self._pos)
+        t0 = self.clock()
+        if self._greedy:
+            toks, self.cache = self._decode(self.params, self.cache,
+                                            tokens, pos)
+            t_w = tr.now() if tr else 0.0
+            toks = np.asarray(toks)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens, pos)
+            t_w = tr.now() if tr else 0.0
+            toks = np.asarray(self._sample(logits[:, -1]))
+        self.n_decode_steps += 1
+        # toks is on host here, so this brackets the real per-step
+        # decode latency (dispatch + device compute + sample)
+        dt = self.clock() - t0
+        self.decode_step_s.append(dt)
+        if self._mx:
+            self._mx["decode_steps"].inc()
+            self._mx["decode_s"].observe(dt)
+        if tr:
+            tr.span_end("decode", t_span, slots=n_active,
+                        dispatch_s=t_w - t0, wait_s=tr.now() - t_w)
+        return toks
+
+    def _decode_with_retry(self, active: list) \
+            -> tuple[Optional[np.ndarray], list]:
+        """Plain decode step with bounded retry-on-failure (§12).
+
+        Failure sources: injected faults (ecfg.fault_spec) and the
+        always-on sanity check that every sampled token id is in-vocab —
+        the host-side detector for corrupted logits (greedy sampling is
+        folded into the jitted executable, so NaN logits are observable
+        only as a garbage argmax; an out-of-range id is the symptom, and
+        unlike a raised exception it is per-SLOT attributable).
+
+        Recovery contract: a failed attempt may already have written this
+        step's K/V row for every decoding slot, so ALL active slots roll
+        back to their pre-step positions — `rollback_slot`'s kv_pos→-1
+        positional invalidation, the same primitive speculative decoding
+        rolls rejected windows back with — and the step re-executes.
+        Greedy decode re-derives bit-identical tokens from the unchanged
+        committed prefix (the spec-path hypothesis property of
+        tests/test_spec.py, re-asserted end-to-end under fault storms in
+        tests/test_faults.py). A slot whose token stays corrupt for
+        ``max_retries + 1`` consecutive attempts is quarantined — retired
+        as "failed" and dropped from the batch — so one poison request
+        can never wedge everyone else. Unattributable failures (raised
+        exceptions) share the attempt budget and fail the WHOLE batch
+        when it exhausts: the loud backstop for a deterministically
+        crashing step, loud because silently spinning would be worse.
+
+        Returns (tokens, surviving_active); tokens is None when every
+        slot was quarantined."""
+        pos0 = self._pos.copy()
+        attempt = 0
+        while active:
+            inj = self._faults
+            kind = inj.draw_step() if inj else None
+            try:
+                if kind == "exception":
+                    raise StepFailure("injected transient step exception")
+                if kind == "slow":
+                    inj.sleep()
+                toks = self._dispatch_decode(len(active))
+                if inj is not None:
+                    toks = inj.corrupt_tokens(
+                        toks, active,
+                        {s: self.sched.slots[s].uid for s in active})
+                bad = [s for s in active
+                       if not 0 <= int(toks[s]) < self.cfg.vocab]
+                if bad:
+                    raise StepFailure(
+                        f"out-of-vocab decode token(s): "
+                        f"{[(s, int(toks[s])) for s in bad]}", slots=bad)
+                self._fail_streak[active] = 0
+                return toks, active
+            except StepFailure as e:
+                attempt += 1
+                self.n_step_retries += 1
+                if self._mx:
+                    self._mx["retries"].inc()
+                # undo any K/V the failed dispatch wrote: every active
+                # slot back to its pre-step position (host _pos has not
+                # advanced, so re-execution is bit-identical)
+                for s in active:
+                    self.cache = _ROLLBACK(self.cache, jnp.int32(s),
+                                           jnp.int32(pos0[s]))
+                if e.slots:
+                    for s in e.slots:
+                        self._fail_streak[s] += 1
+                        if self._fail_streak[s] > self.ecfg.max_retries:
+                            print(f"[engine] quarantining slot {s} (uid "
+                                  f"{self.sched.slots[s].uid}): corrupt "
+                                  f"decode output {self._fail_streak[s]} "
+                                  f"attempts running", file=sys.stderr)
+                            self._retire(s, "failed")
+                            self._fail_streak[s] = 0
+                            active = [a for a in active if a != s]
+                elif attempt > self.ecfg.max_retries:
+                    print(f"[engine] decode failed {attempt} attempts "
+                          f"with no attributable slot — failing the "
+                          f"whole batch: {e}", file=sys.stderr)
+                    for s in list(active):
+                        self._fail_streak[s] = 0
+                        self._retire(s, "failed")
+                    active = []
+                if active and self.ecfg.retry_backoff_s > 0:
+                    time.sleep(min(0.05, self.ecfg.retry_backoff_s
+                                   * (2.0 ** (attempt - 1))))
+        return None, []
+
+    def _prefill_backlog(self) -> int:
+        """Prompt chunks still to stream for mid-prefill slots — the
+        prefill half of the ladder's pressure signal and the end-of-step
+        backlog gauge."""
+        if not self.ecfg.prefill_chunk:
+            return 0
+        backlog = 0
+        for s in self.sched.prefill_slots():
+            rem = len(self.sched.slots[s].prompt) \
+                - int(self._prefill_prog[s])
+            backlog += -(-rem // self.ecfg.prefill_chunk)
+        return backlog
+
     def step(self) -> list[EngineRequest]:
         """Admit + (chunk-budgeted) prefill + one batched decode step.
         Returns requests finishing now."""
@@ -705,8 +1007,33 @@ class Engine:
         # waiting on anything; counting it would inflate the one-shot
         # stall baseline with the idle-engine admission burst)
         n_decoding_before = len(self.sched.active_slots())
+        if self._any_deadlines:
+            self._enforce_deadlines()
+        # --- degradation ladder (faults.DegradationLadder, §12) --------
+        # pressure = queue depth + prefill backlog chunks, fed BEFORE
+        # admission so this step's policy reflects the load it is about
+        # to admit under
+        defer = ()
+        if self._ladder is not None:
+            pressure = len(self.sched.queue) + self._prefill_backlog()
+            rung = self._ladder.update(pressure)
+            if rung != self._rung:
+                if self._mx:
+                    self._mx["degr_transitions"].inc()
+                if self.tracer:
+                    self.tracer.event("degrade", rung=rung,
+                                      prev=self._rung, pressure=pressure)
+                self._rung = rung
+            if self._mx:
+                self._mx["rung"].set(rung)
+            if rung >= 3:
+                # shed queued load (batch class first) back down to the
+                # rung-2 threshold — enough relief to stop climbing
+                self.sched.shed_queued_to(int(self._ladder.thresholds[1]))
+            if rung >= 2:
+                defer = ("batch",)
         prefill_tokens = 0
-        for slot, req in self.sched.admit():
+        for slot, req in self.sched.admit(defer=defer):
             if self.ecfg.prefill_chunk:
                 self._admit_chunked(slot, req)
             else:
@@ -722,7 +1049,7 @@ class Engine:
                     self.sched.prefill_slots():
                 prefill_tokens += self._prefill_work()
         active = self.sched.active_slots()
-        if active and self._spec is not None:
+        if active and self._spec is not None and self._rung < 1:
             # speculative step: draft k tokens batched over the draft
             # cache, verify each slot's window in one fused pass, commit
             # 1..spec_k+1 tokens per slot (token-identical to the plain
@@ -739,38 +1066,13 @@ class Engine:
             # and the chunk kernel masks cache rows at >= pos_start, so
             # it can never be attended (per-slot attention shields every
             # other request)
+            if self._spec is not None:
+                # ladder rung >= 1: spec engine routed through plain
+                # decode — output-identical by the lossless accept rule,
+                # so suspension is the free first degradation
+                self._spec.note_suspended()
+            toks, active = self._decode_with_retry(active)
             tr = self.tracer
-            # the decode SPAN opens before staging: the two host->device
-            # puts below are real per-step decode cost (on small models
-            # they rival the matmuls) and must attribute to the phase,
-            # not leak into the step span's uncovered remainder. The
-            # tracked decode_step_s metric keeps its historical bracket
-            # (post-staging t0) so its trend stays comparable across PRs.
-            t_span = tr.begin() if tr else 0.0
-            tokens = jnp.asarray(self._last_tok[:, None])
-            pos = jnp.asarray(self._pos)
-            t0 = self.clock()
-            if self._greedy:
-                toks, self.cache = self._decode(self.params, self.cache,
-                                                tokens, pos)
-                t_w = tr.now() if tr else 0.0
-                toks = np.asarray(toks)
-            else:
-                logits, self.cache = self._decode(self.params, self.cache,
-                                                  tokens, pos)
-                t_w = tr.now() if tr else 0.0
-                toks = np.asarray(self._sample(logits[:, -1]))
-            self.n_decode_steps += 1
-            # toks is on host here, so this brackets the real per-step
-            # decode latency (dispatch + device compute + sample)
-            dt = self.clock() - t0
-            self.decode_step_s.append(dt)
-            if self._mx:
-                self._mx["decode_steps"].inc()
-                self._mx["decode_s"].observe(dt)
-            if tr:
-                tr.span_end("decode", t_span, slots=len(active),
-                            dispatch_s=t_w - t0, wait_s=tr.now() - t_w)
             t_c = tr.begin() if tr else 0.0
             emitted = 0
             for slot in active:
@@ -818,12 +1120,7 @@ class Engine:
                 if r is not None:
                     occupied += 1
                     in_flight += max(0, r.max_new_tokens - len(r.out))
-            backlog = 0
-            if self.ecfg.prefill_chunk:
-                for s in self.sched.prefill_slots():
-                    rem = len(self.sched.slots[s].prompt) \
-                        - int(self._prefill_prog[s])
-                    backlog += -(-rem // self.ecfg.prefill_chunk)
+            backlog = self._prefill_backlog()
             mx["occupancy"].set(occupied / self.ecfg.n_slots)
             mx["decoding"].set(len(self.sched.active_slots()))
             mx["backlog"].set(backlog)
@@ -846,17 +1143,84 @@ class Engine:
                         decode_slots=n_decoding_before)
         return self.sched.finished[n_done_before:]
 
-    def drain(self) -> list[EngineRequest]:
+    def drain(self, timeout_s: Optional[float] = None,
+              stall_steps: int = 10_000) -> list[EngineRequest]:
         """Run until queue and slots are empty; returns all finished
-        requests in uid order."""
+        requests in uid order.
+
+        Watchdog (§12): the loop is bounded by wall clock (``timeout_s``,
+        None = unbounded) AND by a no-progress counter — ``stall_steps``
+        consecutive steps during which nothing observable moved (no
+        finish, no admission, no token committed, no prefill progress).
+        A healthy engine always moves one of those per step, so tripping
+        either bound means a wedge; the watchdog force-fails every
+        outstanding request (reason "failed") with a loud log instead of
+        hanging the caller forever. The historical drain() — plain
+        ``while not idle: step()`` — is the defaults' behavior on any
+        non-wedged engine."""
+        t0 = self.clock()
+        stalled = 0
+        sig = None
         while not self.sched.idle:
             self.step()
+            cur = (len(self.sched.finished), self.sched.n_admitted,
+                   sum(len(r.out) for r in self.sched.slots
+                       if r is not None),
+                   int(self._prefill_prog.sum()))
+            if cur == sig:
+                stalled += 1
+            else:
+                stalled = 0
+                sig = cur
+            if stalled >= stall_steps:
+                self._force_fail_outstanding(
+                    f"no progress across {stalled} consecutive steps")
+                break
+            if timeout_s is not None and self.clock() - t0 > timeout_s:
+                self._force_fail_outstanding(
+                    f"drain exceeded timeout_s={timeout_s}")
+                break
+        self.sweep_idle_rows()
         return sorted(self.sched.finished, key=lambda r: r.uid)
+
+    def sweep_idle_rows(self) -> None:
+        """Clear the ride-along position marks idle slots accumulate.
+
+        An idle slot in the fixed-shape decode batch re-marks its own
+        t=0 row each step (by design — the next admission rewrites the
+        row wholesale), so after the LAST decode step of a drain, slots
+        that retired before it still carry one stray mark. Clearing
+        empty slots here (target and draft caches) restores the
+        "drained engine ⇒ empty slot pool" invariant the chaos harness
+        leak-checks with `kvcache.occupied_slots`. O(n_slots) tiny
+        dispatches, once per drain — not hot-path cost."""
+        for s, r in enumerate(self.sched.slots):
+            if r is None:
+                self.cache = self._clear(self.cache, jnp.int32(s))
+                if self._spec is not None:
+                    self._spec.clear(s)
+
+    def _force_fail_outstanding(self, why: str) -> None:
+        """Watchdog action: fail every queued + slotted request so the
+        drain terminates with the full exactly-once retire accounting
+        intact (a wedged engine must still leave no request in limbo)."""
+        n_q = len(self.sched.queue)
+        n_s = sum(r is not None for r in self.sched.slots)
+        print(f"[engine] drain watchdog tripped ({why}): force-failing "
+              f"{n_q} queued + {n_s} slotted request(s)", file=sys.stderr)
+        for slot, req in enumerate(self.sched.slots):
+            if req is not None:
+                self._retire(slot, "failed")
+        while self.sched.queue:
+            self.sched.drop_queued(self.sched.queue[0], "failed")
 
     # ----------------------------------------------------------- metrics --
     def metrics(self) -> dict:
         from repro.obs import mean, pct as p, phase_breakdown
         fin = self.sched.finished
+        reasons: dict = {}
+        for r in fin:
+            reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
         ttfts = [r.ttft for r in fin if r.ttft is not None]
         tps = [r.tokens_per_s for r in fin if r.tokens_per_s is not None]
         total_tokens = sum(len(r.out) for r in fin)
@@ -898,6 +1262,11 @@ class Engine:
                 # live acceptance gauge: EWMA over per-verify fractions —
                 # tracks recent drift the cumulative rate smooths away
                 "acceptance_ewma": self.sched.accept_ewma,
+                # plain-decode steps taken while the ladder suspended
+                # speculation (rung >= 1) — output-identical by the
+                # accept rule, costs only acceptance on resume
+                "spec_suspended_steps": (self._spec.n_suspended_steps
+                                         if self._spec else 0),
             }
         out = {
             "n_finished": len(fin),
@@ -938,8 +1307,20 @@ class Engine:
             "kv_mode": self.cache.mode,
             "kv_static_scales": self.cache.static,
             "kv_bytes_per_token": self.cache.bytes_per_token(),
+            # fault-tolerance accounting (§12): the retire-reason
+            # partition (every finished request counted exactly once)
+            # plus the policy counters the chaos harness asserts over
+            "retire_reasons": reasons,
+            "requests_shed": self.sched.n_shed,
+            "requests_cancelled": self.sched.n_cancelled,
+            "step_retries": self.n_step_retries,
+            "degradation_rung": self._rung,
+            "degradation_transitions": (self._ladder.n_transitions
+                                        if self._ladder else 0),
             **spec,
         }
+        if self._faults is not None:
+            out["faults_injected"] = self._faults.counts()
         if self.registry is not None:
             # the always-on registry snapshot rides along so one
             # metrics() call is the full observability surface (the

@@ -462,6 +462,18 @@ def slice_layers(cache: SlotKVCache, lo: int, hi: int) -> SlotKVCache:
     return jax.tree_util.tree_map(lambda x: x[lo:hi], cache)
 
 
+def occupied_slots(cache: SlotKVCache) -> list[int]:
+    """Slots with ANY valid (kv_pos >= 0) row — the slot-pool leak
+    check. After a full drain every request has retired and `clear_slot`
+    flipped its rows to -1, so a non-empty result means a retire path
+    forgot the cache half of the slot (asserted over target AND draft
+    caches by the chaos harness, tests/test_faults.py). One bounded
+    host transfer of the position plane; diagnostics, not hot path."""
+    import numpy as np
+    pos = np.asarray(cache.kv_pos)                    # (L, N, T)
+    return np.unique(np.nonzero((pos >= 0).any(axis=(0, 2)))[0]).tolist()
+
+
 # -------------------------------------------------- quality counters ---
 def kv_quality_counters(cache: SlotKVCache, max_rows: int = 4096,
                         ref_scales: Optional[dict] = None) -> dict:

@@ -7,13 +7,44 @@ admitted into free slots (`admit`), which slots are active (`active_slots`),
 and it reports terminations back (`retire`). Replacing the wave-synchronous
 loop, a finished request frees its slot immediately, so one long generation
 no longer stalls the short requests batched with it.
+
+Admission control (DESIGN.md §12): with ``max_queue > 0`` the submit
+queue is bounded and an arrival into a full queue invokes the
+``overload_policy`` — "reject-new" sheds the arrival itself,
+"shed-oldest" sheds the queue head (the request that has already waited
+longest and is least likely to meet any deadline), "shed-by-class"
+sheds the oldest queued batch-class request first (interactive traffic
+keeps its slot chances; the loadgen classes carry much looser batch
+SLOs) and falls back to the arrival. Shed requests finish immediately
+with reason "shed" — every submission still retires exactly once, just
+without ever holding a slot. The set point for ``max_queue`` defaults
+from the measured open-loop saturation knee (`admission_set_point`).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Optional
+
+#: Bounded-queue overload policies (Scheduler(max_queue=...)).
+OVERLOAD_POLICIES = ("reject-new", "shed-oldest", "shed-by-class")
+
+#: Classes shed first under "shed-by-class" and deferred by the
+#: degradation ladder — the loadgen batch class (loose SLO, long
+#: prompts): dropping one frees the most work for the least SLO damage.
+SHED_CLASSES = ("batch",)
+
+
+class SubmitError(ValueError):
+    """Structured rejection at `Engine.submit` time: a malformed request
+    fails fast at the API surface instead of deep inside admission.
+    ``code`` ∈ {"empty_prompt", "too_long", "bad_budget"}."""
+
+    def __init__(self, code: str, msg: str):
+        super().__init__(msg)
+        self.code = code
 
 
 @dataclasses.dataclass
@@ -30,8 +61,18 @@ class EngineRequest:
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     # why the request retired: one of obs.schema.RETIRE_REASONS
-    # ("eos" | "budget" | "max_len" | "zero_budget"); None while running
+    # (normal: "eos" | "budget" | "max_len" | "zero_budget"; lifecycle
+    # policy: "cancelled" | "deadline_exceeded" | "shed" | "failed");
+    # None while running
     finish_reason: Optional[str] = None
+    # loadgen request class ("interactive" | "batch" | None): the
+    # shed-by-class victim key and the ladder's admission-defer key
+    cls: Optional[str] = None
+    # wall-clock deadlines, seconds relative to t_submit (None = no
+    # deadline). Enforced by the engine at step boundaries: ttft for
+    # requests still awaiting their first token, total for everyone.
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -51,9 +92,18 @@ class Scheduler:
     """FCFS queue + fixed slot pool."""
 
     def __init__(self, n_slots: int, clock=time.perf_counter, tracer=None,
-                 registry=None):
+                 registry=None, max_queue: int = 0,
+                 overload_policy: str = "reject-new"):
         self.n_slots = n_slots
         self.clock = clock
+        # admission control: 0 = unbounded queue (the historical
+        # behavior); > 0 bounds the queue and overload_policy picks the
+        # shed victim when an arrival would exceed it
+        if overload_policy not in OVERLOAD_POLICIES:
+            raise ValueError(f"overload_policy {overload_policy!r} not in "
+                             f"{OVERLOAD_POLICIES}")
+        self.max_queue = int(max_queue or 0)
+        self.overload_policy = overload_policy
         # lifecycle-event sink (obs.Tracer); the scheduler owns the
         # submit/admit/retire transitions so it emits those events.
         # Falsy tracers normalize to None — one branch per site disabled.
@@ -91,6 +141,13 @@ class Scheduler:
                 "admit_latency": registry.histogram(
                     "sched_admit_latency_seconds",
                     "submit -> slot placement wait"),
+                "shed": registry.counter(
+                    "sched_requests_shed",
+                    "requests shed by admission control or the "
+                    "degradation ladder (retire reason \"shed\")"),
+                "cancelled": registry.counter(
+                    "sched_requests_cancelled",
+                    "requests cancelled mid-flight or while queued"),
             }
         # slots admitted but not fully prefilled yet (chunked-prefill
         # engines): they hold their request (the slot is occupied) but are
@@ -100,6 +157,8 @@ class Scheduler:
         # counters for the engine's metrics snapshot
         self.n_submitted = 0
         self.n_admitted = 0
+        self.n_shed = 0
+        self.n_cancelled = 0
         self.queue_depth_hist: list[int] = []
         # speculative-decoding accounting (spec_k > 0 engines): totals,
         # the per-verify accepted-length histogram, and per-slot
@@ -119,8 +178,12 @@ class Scheduler:
     # ------------------------------------------------------------ intake --
     def submit(self, req: EngineRequest) -> EngineRequest:
         req.t_submit = self.clock()
-        self.queue.append(req)
         self.n_submitted += 1
+        victim = None
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            victim = self._overload_victim(req)
+        if victim is not req:
+            self.queue.append(req)
         self.queue_depth_submit.append(len(self.queue))
         if self._mx:
             self._mx["submitted"].inc()
@@ -131,7 +194,24 @@ class Scheduler:
                               prompt_len=int(len(req.prompt)),
                               budget=req.max_new_tokens,
                               queue_depth=len(self.queue))
+        if victim is not None:
+            if victim is not req:
+                self.queue.remove(victim)
+                if self._mx:
+                    self._mx["depth"].set(len(self.queue))
+            self._finish(victim, "shed")
         return req
+
+    def _overload_victim(self, incoming: EngineRequest) -> EngineRequest:
+        """Pick the request to shed when ``incoming`` finds the queue
+        full. Policies: see OVERLOAD_POLICIES / the module docstring."""
+        if self.overload_policy == "shed-oldest" and self.queue:
+            return self.queue[0]
+        if self.overload_policy == "shed-by-class":
+            for r in self.queue:                      # oldest batch first
+                if r.cls in SHED_CLASSES:
+                    return r
+        return incoming                               # reject-new
 
     # ---------------------------------------------------------- stepping --
     def free_slots(self) -> list[int]:
@@ -157,14 +237,25 @@ class Scheduler:
         """Mid-prefill slots in FCFS begin order (the chunk-budget order)."""
         return list(self._prefilling)
 
-    def admit(self) -> list[tuple[int, EngineRequest]]:
+    def admit(self, defer=()) -> list[tuple[int, EngineRequest]]:
         """Move queued requests into free slots (FCFS). Returns the
-        (slot, request) pairs admitted this step; the engine prefills them."""
+        (slot, request) pairs admitted this step; the engine prefills
+        them. ``defer`` names request classes to skip over this step
+        (the degradation ladder's rung-2 action): deferred requests
+        keep their queue position and admit normally once the rung
+        drops."""
         placed = []
         for slot in self.free_slots():
-            if not self.queue:
+            if defer:
+                req = next((r for r in self.queue if r.cls not in defer),
+                           None)
+                if req is None:
+                    break
+                self.queue.remove(req)
+            elif self.queue:
+                req = self.queue.popleft()
+            else:
                 break
-            req = self.queue.popleft()
             self.slots[slot] = req
             self.n_admitted += 1
             placed.append((slot, req))
@@ -183,23 +274,61 @@ class Scheduler:
 
     def retire(self, slot: int, reason: str = "eos") -> EngineRequest:
         """Free a slot whose request finished. ``reason`` is the
-        lifecycle vocabulary ("eos" | "budget" | "max_len" |
-        "zero_budget") — recorded on the request and in the trace."""
+        lifecycle vocabulary (obs.schema.RETIRE_REASONS) — recorded on
+        the request and in the trace."""
         req = self.slots[slot]
         assert req is not None, f"retire of empty slot {slot}"
+        self.slots[slot] = None
+        if slot in self._prefilling:            # retired mid-prefill (eos
+            self._prefilling.remove(slot)       # on first token, 0 budget,
+                                                # cancel, deadline)
+        self._finish(req, reason, slot=slot)
+        return req
+
+    def _finish(self, req: EngineRequest, reason: str,
+                slot: Optional[int] = None) -> None:
+        """Shared terminal transition: slotted retires, queue drops, and
+        shed-at-submit all funnel here, so every request finishes exactly
+        once with exactly one reason. ``slot=None`` means the request
+        never held a slot (trace records it as slot=-1)."""
+        assert not req.done, f"double finish of uid {req.uid}"
         req.done = True
         req.t_done = self.clock()
         req.finish_reason = reason
-        self.slots[slot] = None
-        if slot in self._prefilling:            # retired mid-prefill (eos
-            self._prefilling.remove(slot)       # on first token, 0 budget)
         self.finished.append(req)
+        if reason == "shed":
+            self.n_shed += 1
+        elif reason == "cancelled":
+            self.n_cancelled += 1
         if self._mx:
             self._mx["retired"].inc()
+            if reason in ("shed", "cancelled"):
+                self._mx[reason].inc()
         if self.tracer:
-            self.tracer.event("retire", uid=req.uid, slot=slot,
+            self.tracer.event("retire", uid=req.uid,
+                              slot=-1 if slot is None else slot,
                               reason=reason, n_out=len(req.out))
-        return req
+
+    def drop_queued(self, req: EngineRequest, reason: str) -> None:
+        """Finish a request that is still waiting in the queue (cancel,
+        deadline sweep, forced drain) without it ever holding a slot."""
+        self.queue.remove(req)
+        if self._mx:
+            self._mx["depth"].set(len(self.queue))
+        self._finish(req, reason)
+
+    def shed_queued_to(self, target_depth: int,
+                       prefer=SHED_CLASSES) -> int:
+        """Shed queued requests (oldest ``prefer``-class first, then
+        FCFS head) until the queue is at ``target_depth`` — the ladder's
+        rung-3 action. Returns how many were shed."""
+        n = 0
+        while len(self.queue) > max(0, int(target_depth)):
+            victim = next((r for r in self.queue if r.cls in prefer),
+                          self.queue[0])
+            self.drop_queued(victim, "shed")
+            n += 1
+        return n
 
     # ------------------------------------------------------------- state --
     @property
@@ -239,3 +368,33 @@ class Scheduler:
         if not self.spec_proposed:
             return None
         return self.spec_accepted / self.spec_proposed
+
+
+# ----------------------------------------------- admission set point ----
+def admission_set_point(open_loop: Optional[dict], slack: float = 2.0,
+                        floor: int = 2) -> Optional[int]:
+    """Derive the bounded-queue set point from a measured ``open_loop``
+    BENCH_serve.json section (DESIGN.md §12).
+
+    The policy: at the knee's last-OK offered rate the engine still met
+    its SLOs, so the p95 queue depth arrivals saw THERE is the deepest
+    backlog known to be survivable; bound the queue at ``slack`` × that
+    depth (headroom for bursts the MMPP-2 process loves) with a small
+    floor. Queued work beyond the bound would exit the measured-OK
+    regime, so shedding it early converts doomed latency into goodput —
+    the overload bench gates that this actually holds. Returns None when
+    the section is missing, the sweep never saturated (no knee ⇒ no
+    pressure ⇒ no bound needed), or the knee point lacks the depth
+    signal (older BENCH files)."""
+    if not open_loop:
+        return None
+    knee = open_loop.get("knee") or {}
+    last_ok = knee.get("last_ok_offered_rps")
+    if last_ok is None:
+        return None
+    pt = next((p for p in open_loop.get("points") or []
+               if p.get("offered_rps") == last_ok), None)
+    depth = (pt or {}).get("queue_depth_at_submit_p95")
+    if depth is None:
+        return None
+    return max(int(floor), int(math.ceil(float(depth) * slack)))

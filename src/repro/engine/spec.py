@@ -163,6 +163,25 @@ class SpecDecoder:
         self._chunk_prefill = (_engine._jitted_chunk_prefill(cfg)
                                if ecfg.prefill_chunk else None)
         self.n_draft_steps = 0
+        self.n_suspended_steps = 0
+        if self._mx is not None:
+            self._mx["suspended"] = registry.counter(
+                "spec_suspended_steps",
+                "decode steps where the degradation ladder routed a "
+                "spec-enabled engine through plain decode")
+
+    def note_suspended(self) -> None:
+        """Record one plain-decode step taken while speculation is
+        suspended (degradation-ladder rung >= 1). Tokens committed by
+        those steps are never written to the draft cache, so the slot's
+        draft rows grow position HOLES; holes are masked out of draft
+        attention (validity-by-position), which can only cost acceptance
+        — the verify pass stays authoritative, so resuming speculation
+        after a suspension remains token-identical (the `spec_k→0 is
+        free` property the ladder's first rung relies on)."""
+        self.n_suspended_steps += 1
+        if self._mx is not None:
+            self._mx["suspended"].inc()
 
     # ------------------------------------------------- slot lifecycle ----
     def prefill_oneshot(self, toks, slot: int, length: int) -> None:

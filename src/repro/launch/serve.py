@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import QuantConfig, QuantPolicy, quantize_tree
-from repro.engine import Engine, EngineConfig
+from repro.engine import (Engine, EngineConfig, FaultSpec,
+                          admission_set_point, occupied_slots)
 from repro.models import get_model
 from repro.runtime.serve_loop import Request, ServeConfig, Server
 
@@ -145,6 +146,48 @@ def main():
                          "weights are minted from (with --spec-k; "
                          "without it the target drafts for itself — "
                          "acceptance ~1 but no draft-cost win)")
+    ap.add_argument("--max-queue", default="0", metavar="N|auto",
+                    help="admission control: bound the submit queue at N "
+                         "requests; a submit past the bound triggers "
+                         "--overload-policy. 0 = unbounded (legacy). "
+                         "'auto' sizes the bound from the measured "
+                         "open-loop saturation knee in the repo's "
+                         "BENCH_serve.json (2x the p95 queue depth at "
+                         "the last SLO-attaining sweep point)")
+    ap.add_argument("--overload-policy", default="reject-new",
+                    choices=["reject-new", "shed-oldest", "shed-by-class"],
+                    help="who loses when the bounded queue is full: the "
+                         "incoming request, the oldest queued one, or "
+                         "the oldest queued batch-class request "
+                         "(falling back to the incoming one)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="enable the graceful-degradation ladder: under "
+                         "sustained backlog the engine first suspends "
+                         "speculative decoding (output-identical), then "
+                         "defers batch-class admissions, then sheds "
+                         "queued work — each rung transition is a "
+                         "metrics event (engine_degradation_rung)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="seeded chaos injection, e.g. "
+                         "'exception=0.05,nan=0.02,seed=3' (keys: "
+                         "exception, nan, slow, slow_s, poison, seed, "
+                         "max). Failed steps retry after KV rollback; "
+                         "slots that keep failing retire as 'failed'. "
+                         "Post-drain invariants (clean retire reasons, "
+                         "no slot-pool leak) are asserted. Engine only; "
+                         "incompatible with --spec-k")
+    ap.add_argument("--drain-timeout", type=float, default=None,
+                    metavar="S",
+                    help="drain watchdog: force-fail all outstanding "
+                         "requests after this many wall seconds (None = "
+                         "no wall limit; the no-progress watchdog still "
+                         "applies)")
+    ap.add_argument("--drain-stall-steps", type=int, default=10_000,
+                    metavar="N",
+                    help="drain watchdog: force-fail outstanding "
+                         "requests after N consecutive engine steps "
+                         "with no progress (tokens, admissions, prefill "
+                         "chunks, or retires)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="enable engine tracing (repro.obs) and write the "
                          "JSONL event log here: per-request lifecycle "
@@ -283,6 +326,33 @@ def main():
             "--trace/--metrics-json/--metrics-snapshot/--metrics-prom "
             "are engine features — the wave loop has no tracer, "
             "registry, or metrics() snapshot; drop --wave")
+    if args.wave and (args.faults or args.degrade
+                      or args.max_queue not in ("0", 0)):
+        raise NotImplementedError(
+            "--faults/--degrade/--max-queue are engine features — the "
+            "wave loop has no retry, ladder, or admission control; "
+            "drop --wave")
+    if args.max_queue == "auto":
+        # size the bound from the committed open-loop knee: the p95
+        # queue depth at the last sweep point that still attained its
+        # SLO is the deepest backlog this box has been MEASURED to
+        # absorb — 2x that is the admission set point (DESIGN.md §12)
+        root = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "..", "..")
+        bench = os.path.abspath(os.path.join(root, "BENCH_serve.json"))
+        max_queue = 0
+        try:
+            import json as _json
+            with open(bench) as f:
+                max_queue = admission_set_point(
+                    _json.load(f).get("open_loop") or {}) or 0
+        except (FileNotFoundError, ValueError):
+            pass
+        print(f"admission: --max-queue auto -> "
+              f"{max_queue or 'unbounded (no measured knee)'} "
+              f"(from {bench})")
+    else:
+        max_queue = int(args.max_queue)
     if args.wave:
         srv = Server(cfg, params, ServeConfig(
             max_batch=args.slots, max_new_tokens=args.max_new_tokens,
@@ -298,7 +368,10 @@ def main():
         kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
         prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
         draft_recipe=args.draft_recipe, metrics=not args.no_metrics,
-        trace=bool(args.trace), trace_kv_every=args.trace_kv_every),
+        trace=bool(args.trace), trace_kv_every=args.trace_kv_every,
+        max_queue=max_queue, overload_policy=args.overload_policy,
+        degrade=args.degrade,
+        fault_spec=FaultSpec.parse(args.faults) if args.faults else None),
         kv_scales=kv_scales)
     writer = None
     if args.metrics_snapshot:
@@ -312,7 +385,8 @@ def main():
     for p in prompts:
         eng.submit(p)
     if writer is None:
-        fin = eng.drain()
+        fin = eng.drain(timeout_s=args.drain_timeout,
+                        stall_steps=args.drain_stall_steps)
     else:
         # step manually so snapshots land DURING the run (the point of
         # an open-ended soak), not just at drain
@@ -323,9 +397,42 @@ def main():
         writer.write()                            # final flush
         fin = sorted(eng.sched.finished, key=lambda r: r.uid)
     for r in fin:
-        print(f"req {r.uid}: {len(r.out)} tokens -> {r.out[:12]}  "
-              f"(ttft {r.ttft*1e3:.0f} ms, {r.tokens_per_s:.1f} tok/s)")
+        # shed/failed/expired requests never produced a first token, so
+        # ttft/tokens_per_s are None — a chaos run must not crash the
+        # report loop that summarizes it
+        ttft = "n/a" if r.ttft is None else f"{r.ttft*1e3:.0f} ms"
+        tps = "n/a" if r.tokens_per_s is None \
+            else f"{r.tokens_per_s:.1f} tok/s"
+        print(f"req {r.uid}: {len(r.out)} tokens ({r.finish_reason}) "
+              f"-> {r.out[:12]}  (ttft {ttft}, {tps})")
     m = eng.metrics()
+    if args.faults:
+        # chaos invariants (DESIGN.md §12): every submitted request
+        # retired exactly once with a schema reason, and the drained
+        # engine holds no residual state — a fault injector that leaks
+        # slots or finish states would silently poison later admissions
+        from repro.obs.schema import RETIRE_REASONS
+        reasons = sorted(r.finish_reason for r in eng.sched.finished)
+        bad = [x for x in reasons if x not in RETIRE_REASONS]
+        eng.sweep_idle_rows()       # idempotent; the manual-step path
+        leak = occupied_slots(eng.cache)  # (snapshot writer) skips drain
+        problems = []
+        if len(eng.sched.finished) != len(prompts):
+            problems.append(f"{len(eng.sched.finished)} finished != "
+                            f"{len(prompts)} submitted")
+        if bad:
+            problems.append(f"non-schema retire reasons {bad}")
+        if any(eng.sched.slots) or eng.sched.queue:
+            problems.append("scheduler not empty after drain")
+        if leak:
+            problems.append(f"slot-pool leak: cache rows {leak} still "
+                            f"occupied")
+        print(f"chaos  : injected {m.get('faults_injected')}, "
+              f"{m['step_retries']} step retries, retire reasons "
+              f"{m['retire_reasons']}")
+        if problems:
+            raise SystemExit("chaos invariants VIOLATED: "
+                             + "; ".join(problems))
     print(f"engine: {m['tokens_per_s']:.1f} tok/s, "
           f"util {m['slot_utilization']:.0%}, kv={m['kv_mode']}"
           f"{'/static' if m['kv_static_scales'] else ''} "

@@ -184,6 +184,13 @@ class MetricsRegistry:
     def __len__(self) -> int:
         return len(self._metrics)
 
+    def names(self) -> tuple:
+        """Registered instrument names (un-namespaced, registration
+        order) — the instrument-presence assertion surface (the chaos
+        smoke checks the fault-tolerance counters exist by name here
+        and in the rendered Prometheus text)."""
+        return tuple(self._metrics)
+
     # ------------------------------------------------------- exporting --
     def snapshot(self) -> dict:
         """Plain-dict view: counters/gauges map to their value,

@@ -22,16 +22,31 @@ Phase taxonomy (``span`` names) — each engine step tiles into these:
                         cache→host transfer is traced-mode-only cost)
 
 Lifecycle vocabulary (``event`` names): ``submit``, ``admit``,
-``first_token``, ``retire`` (with ``reason``), ``rollback``.
+``first_token``, ``retire`` (with ``reason``), ``rollback``,
+``cancel`` (the Engine.cancel call site; the matching retire carries
+reason "cancelled"), ``degrade`` (a degradation-ladder rung change —
+engine-scoped, so it carries ``rung``/``pressure`` instead of a uid).
+
+Retire reasons split into the NORMAL terminals (eos / budget / max_len /
+zero_budget) and the POLICY terminals introduced by fault tolerance
+(DESIGN.md §12): ``cancelled`` (client withdrew), ``deadline_exceeded``
+(TTFT or total-wall deadline passed at a step boundary), ``shed``
+(admission control or ladder rung 3 dropped it unserved), ``failed``
+(quarantined after exhausting step retries, or force-failed by the
+drain watchdog). Together they partition every submission: each request
+retires exactly once with exactly one reason (the chaos harness'
+core invariant, tests/test_faults.py).
 """
 from __future__ import annotations
 
 PHASES = ("step", "prefill_oneshot", "prefill_chunk", "draft", "verify",
           "rollback", "accept_commit", "decode", "kv_sample")
 
-LIFECYCLE = ("submit", "admit", "first_token", "retire", "rollback")
+LIFECYCLE = ("submit", "admit", "first_token", "retire", "rollback",
+             "cancel", "degrade")
 
-RETIRE_REASONS = ("eos", "budget", "max_len", "zero_budget")
+RETIRE_REASONS = ("eos", "budget", "max_len", "zero_budget",
+                  "cancelled", "deadline_exceeded", "shed", "failed")
 
 KINDS = ("header", "span", "event", "counter")
 
@@ -88,7 +103,8 @@ def validate_events(records: list[dict]) -> list[str]:
             name = rec.get("name")
             if name not in LIFECYCLE:
                 errs.append(f"record {i}: unknown lifecycle event {name!r}")
-            if name in ("submit", "admit", "first_token", "retire") \
+            if name in ("submit", "admit", "first_token", "retire",
+                        "cancel") \
                     and not isinstance(rec.get("uid"), int):
                 errs.append(f"record {i} ({name}): missing/bad uid")
             if name == "retire" \
