@@ -73,6 +73,11 @@ class Arrival:
     #: kwargs); None = no deadline
     ttft_deadline_s: Optional[float] = None
     deadline_s: Optional[float] = None
+    #: absolute schedule time at which the serving PROCESS is scheduled
+    #: to crash (DESIGN.md §13) — process-level, unlike the per-request
+    #: fields above: the harness arms the engine's crash injector at the
+    #: first step boundary past this time. None = no crash scheduled
+    crash_t: Optional[float] = None
 
 
 def poisson_burst_times(rng: np.random.Generator, n: int, rate: float,
@@ -123,7 +128,9 @@ def make_open_loop_workload(seed: int, n: int, vocab: int, rate: float,
                             cancel_rate: float = 0.0,
                             cancel_after_s: tuple = (0.05, 0.5),
                             deadlines: bool = False,
-                            deadline_factor: float = 8.0) \
+                            deadline_factor: float = 8.0,
+                            crash_rate: float = 0.0,
+                            crash_after_s: tuple = (0.02, 0.3)) \
         -> list[Arrival]:
     """The full deterministic schedule: arrival times + class draws +
     prompts + budgets from one seeded rng. Same (seed, n, vocab, rate,
@@ -143,7 +150,13 @@ def make_open_loop_workload(seed: int, n: int, vocab: int, rate: float,
       deadline_factor`` and ``deadline_s`` adds the budgeted decode
       time at the TPOT SLO, also × factor. Deterministic (no rng) —
       deadline enforcement changes which requests FINISH, and seeding
-      that through the schedule would conflate policy with workload."""
+      that through the schedule would conflate policy with workload.
+    * ``crash_rate`` — each request independently marks a scheduled
+      PROCESS crash with this probability, at a uniform delay in
+      ``crash_after_s`` after its arrival (DESIGN.md §13). Drawn after
+      the cancel draws, so every lower-numbered option's stream — and
+      the base schedule — stays byte-identical whether crashes are
+      scheduled or not."""
     classes = classes or CLASSES
     rng = np.random.default_rng(seed)
     times = poisson_burst_times(rng, n, rate, burst_factor,
@@ -172,6 +185,16 @@ def make_open_loop_workload(seed: int, n: int, vocab: int, rate: float,
         for i, a in enumerate(out):
             if hit[i]:
                 a.cancel_t = a.t + float(delay[i])
+    if crash_rate > 0:
+        # drawn after the cancel draws (which are after the base
+        # schedule): appending keeps every earlier field byte-identical
+        # for the same seed regardless of crash_rate — a crash/recovery
+        # run and its uncrashed reference share one arrival sequence
+        hit = rng.uniform(size=n) < crash_rate
+        delay = rng.uniform(crash_after_s[0], crash_after_s[1], size=n)
+        for i, a in enumerate(out):
+            if hit[i]:
+                a.crash_t = a.t + float(delay[i])
     if deadlines:
         for a in out:
             spec = classes[a.cls]

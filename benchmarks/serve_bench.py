@@ -203,6 +203,76 @@ def run_open_loop(cfg, params, arrivals, ecfg):
     return slo_summary(judged, wall), m
 
 
+def run_recovery_bench(cfg, params, vocab, n, seed, slots, max_len):
+    """Seeded crash/recovery measurement (DESIGN.md §13): replay a
+    loadgen schedule whose appended ``crash_t`` draws pick the crash
+    moment, serve it with the journal + periodic snapshots armed, "die"
+    at the first step boundary past the scheduled crash time (stop
+    stepping — the durable state is exactly what a SIGKILL would leave),
+    then recover in a fresh engine and drain. Reports restore latency,
+    how much work survived in the snapshot vs re-prefilled from the
+    journal, and token identity of the combined outputs against an
+    uncrashed reference run of the same schedule."""
+    import shutil
+    import tempfile
+    sched = make_open_loop_workload(seed, n, vocab, float("inf"),
+                                    crash_rate=1.0)
+    crash_t = min(a.crash_t for a in sched)
+    ecfg = EngineConfig(n_slots=slots, max_len=max_len, kv_mode="int8",
+                        prefill_bucket=16)
+
+    def submit_all(eng):
+        for a in sched:
+            eng.submit(a.prompt, max_new_tokens=a.max_new_tokens,
+                       cls=a.cls)
+
+    ref = Engine(cfg, params, ecfg)
+    submit_all(ref)
+    ref_out = {r.uid: list(r.out) for r in ref.drain()}
+
+    tmp = tempfile.mkdtemp(prefix="recovery_bench_")
+    jpath = os.path.join(tmp, "journal.jsonl")
+    spath = os.path.join(tmp, "snap")
+    try:
+        wcfg = EngineConfig(**{**ecfg.__dict__, "journal_path": jpath,
+                               "snapshot_path": spath,
+                               "snapshot_every": 2})
+        eng = Engine(cfg, params, wcfg)
+        submit_all(eng)
+        t0 = time.perf_counter()
+        crashed_at_step = None
+        while not eng.sched.idle:
+            eng.step()
+            if time.perf_counter() - t0 >= crash_t:
+                crashed_at_step = len(eng.step_s)
+                break
+        eng2 = Engine(cfg, params, EngineConfig(
+            **{**wcfg.__dict__, "journal_resume": True}))
+        t1 = time.perf_counter()
+        info = eng2.recover(spath, jpath)
+        restore_s = time.perf_counter() - t1
+        fin = {r.uid: list(r.out) for r in eng2.drain()}
+        combined = {uid: list(rec["out"])
+                    for uid, rec in info["retired"].items()}
+        combined.update(fin)
+        return {
+            "requests": n,
+            "seed": seed,
+            "crash_t_s": crash_t,
+            "crashed_at_step": crashed_at_step,
+            "snapshot_every": 2,
+            "restore_duration_s": restore_s,
+            "n_restored_from_snapshot": info["n_restored"],
+            "n_requeued_from_journal": info["n_requeued"],
+            "n_retired_pre_crash": len(info["retired"]),
+            "token_identical_vs_uncrashed":
+                sorted(combined) == sorted(ref_out)
+                and all(combined[u] == ref_out[u] for u in ref_out),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -233,6 +303,15 @@ def main():
                          "arrival schedule, class draws, and prompts")
     ap.add_argument("--slo-threshold", type=float, default=0.9,
                     help="attainment level defining the saturation knee")
+    ap.add_argument("--recovery-requests", type=int, default=8,
+                    help="requests in the seeded crash/recovery "
+                         "measurement (restore latency, survivor "
+                         "counts, token identity vs an uncrashed "
+                         "reference; 0 disables the section)")
+    ap.add_argument("--recovery-seed", type=int, default=13,
+                    help="loadgen seed for the crash schedule — same "
+                         "seed reproduces the arrivals AND the "
+                         "appended crash_t draws")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: caps requests/repeats/soak so the "
                          "bench (including the tracing-overhead section) "
@@ -248,6 +327,7 @@ def main():
         args.max_len = min(args.max_len, 256)
         args.open_loop_requests = min(args.open_loop_requests, 8)
         args.open_loop_rates = "2,inf"
+        args.recovery_requests = min(args.recovery_requests, 6)
 
     cfg = get_arch(args.arch).reduced()
     model = get_model(cfg)
@@ -575,6 +655,21 @@ def main():
                   f"{'n/a' if ratio is None else f'{ratio:.2f}x'}), "
                   f"shed {n_shed} requests")
 
+    # ---- crash/recovery (DESIGN.md §13): seeded crash schedule, journal
+    # + snapshot recovery, restore latency, token identity vs uncrashed.
+    # Not gated by check_regression (recovery latency on a shared box is
+    # noisy); the token_identical_vs_uncrashed bool is the number that
+    # matters and IS asserted here.
+    recovery = None
+    if args.recovery_requests:
+        recovery = run_recovery_bench(cfg, params, cfg.vocab,
+                                      args.recovery_requests,
+                                      args.recovery_seed, args.slots,
+                                      args.max_len)
+        assert recovery["token_identical_vs_uncrashed"], (
+            f"crash/recovery bench diverged from the uncrashed "
+            f"reference: {recovery}")
+
     def slim(m):
         # registry snapshots are live-export payloads, not tracked bench
         # numbers — keep BENCH_serve.json diffable across PRs
@@ -600,6 +695,7 @@ def main():
         "metrics_overhead": metrics_overhead,
         "soak": soak,
         "open_loop": open_loop,
+        "recovery": recovery,
     }
 
     def steps(m):
@@ -665,6 +761,15 @@ def main():
                   f"{'n/a' if lo is None else f'{lo:g} rps'} offered, "
                   f"saturates at {k['first_saturated_offered_rps']:g} rps "
                   f"({k['first_saturated_attainment']:.0%})")
+    if recovery:
+        print(f"recovery: crashed at step {recovery['crashed_at_step']} "
+              f"(t={recovery['crash_t_s']*1e3:.0f} ms), restore "
+              f"{recovery['restore_duration_s']*1e3:.1f} ms, "
+              f"{recovery['n_restored_from_snapshot']} restored / "
+              f"{recovery['n_requeued_from_journal']} re-enqueued / "
+              f"{recovery['n_retired_pre_crash']} pre-crash retires, "
+              f"token-identical "
+              f"{recovery['token_identical_vs_uncrashed']}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, default=str)
     print(f"wrote {os.path.abspath(args.out)}")

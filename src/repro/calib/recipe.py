@@ -18,6 +18,14 @@ A recipe is everything the serving stack needs to deploy a quantized model
 On disk a recipe is a directory: ``recipe.json`` holds everything scalar
 and the policy map; ``scales.npz`` holds the arrays. Loading is a plain
 read — no model, no data, no clustering.
+
+Integrity (DESIGN.md §13): ``save`` records per-array CRC32 checksums in
+``recipe.json``; ``load`` verifies them (when present — older recipes
+predate the field) and validates the scale invariants (finite, and
+strictly positive for ``*_scale`` — a zero or negative quantization
+step can only come from corruption), raising
+``engine.recovery.IntegrityError`` rather than letting a corrupt recipe
+quantize the serving cache.
 """
 from __future__ import annotations
 
@@ -67,6 +75,7 @@ class QuantRecipe:
         for site, sz in (self.act_scales or {}).items():
             arrays[f"act/{site}/scale"] = np.asarray(sz["scale"], np.float32)
             arrays[f"act/{site}/zero"] = np.asarray(sz["zero"], np.float32)
+        from repro.engine.recovery import checksum_arrays
         doc = {
             "name": self.name,
             "arch": self.arch,
@@ -76,6 +85,7 @@ class QuantRecipe:
             "act_sites": sorted((self.act_scales or {}).keys()),
             "ckpt_dir": self.ckpt_dir,
             "meta": self.meta,
+            "checksums": checksum_arrays(arrays),
         }
         tmp = os.path.join(recipe_dir, RECIPE_JSON + ".tmp")
         with open(tmp, "w") as f:
@@ -92,6 +102,19 @@ class QuantRecipe:
             doc = json.load(f)
         npz_path = os.path.join(recipe_dir, SCALES_NPZ)
         arrays = dict(np.load(npz_path)) if os.path.exists(npz_path) else {}
+        # integrity gate (engine/recovery.py, DESIGN.md §13)
+        from repro.engine.recovery import (check_finite, check_positive,
+                                           verify_checksums)
+        if "checksums" in doc:
+            verify_checksums(arrays, doc["checksums"], context=recipe_dir)
+        for key, a in arrays.items():
+            # KV scales are divisors in dequant: zero/negative can only
+            # be corruption. Act sites keep the weaker finite-only check
+            # (a dead site legitimately calibrates to a degenerate range)
+            if key.startswith("kv/") and key.endswith("_scale"):
+                check_positive(key, a, context=recipe_dir)
+            else:
+                check_finite(key, a, context=recipe_dir)
         kv_scales = None
         if doc.get("has_kv_scales"):
             kv_scales = {kk: arrays[f"kv/{kk}"] for kk in KV_KEYS}

@@ -13,6 +13,14 @@ static meta (bits / k / orig_shape / orig_dtype) under ``quant_meta``.
 `restore` rebuilds the SplitQuantTensors from the manifest — including
 into a plain fp32 `like` tree, which is how a serving process loads an
 offline-quantized checkpoint without re-running k-means.
+
+Integrity (DESIGN.md §13): `save` records a per-array CRC32 under the
+manifest's ``checksums``; `restore` recomputes and compares before any
+array reaches the caller, and validates the SplitQuant invariants
+(codes within the bits-range, finite scale/zero) — corruption raises
+``engine.recovery.IntegrityError`` instead of serving garbage. Manifests
+predating the checksum field restore as before (no silent tightening on
+old artifacts).
 """
 from __future__ import annotations
 
@@ -103,6 +111,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, retain: int = 3,
     def _write():
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "arrays.npz"), **host_arrays)
+        from repro.engine.recovery import checksum_arrays
         manifest = {
             "step": step,
             "treedef": str(treedef),
@@ -110,6 +119,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, retain: int = 3,
             "shapes": {k: list(v.shape) for k, v in host_arrays.items()},
             "dtypes": orig_dtypes,
             "quant_meta": quant_meta,
+            "checksums": checksum_arrays(host_arrays),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -165,6 +175,19 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     quant_meta = manifest.get("quant_meta", {})
+    # integrity gate (engine/recovery.py, DESIGN.md §13): checksums when
+    # the manifest has them (older checkpoints predate the field), quant
+    # invariants always — both are exact, so any trip is real corruption
+    from repro.engine.recovery import (check_code_range, check_finite,
+                                       verify_checksums)
+    if "checksums" in manifest:
+        verify_checksums({k: data[k] for k in data.files},
+                         manifest["checksums"], context=path)
+    for key, meta in quant_meta.items():
+        check_code_range(f"{key}.q", data[f"{key}.q"],
+                         int(meta["bits"]), context=path)
+        for f_ in ("scale", "zero"):
+            check_finite(f"{key}.{f_}", data[f"{key}.{f_}"], context=path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like,
                                                          is_leaf=_is_sqt)
     has_quant = quant_meta or any(_is_sqt(leaf) for _, leaf in flat)

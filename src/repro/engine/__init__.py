@@ -7,16 +7,20 @@ models ← engine.kvcache edge (attention's slot-cache branch) acyclic.
 from __future__ import annotations
 
 from .faults import (DegradationLadder, FaultInjector, FaultSpec,
-                     StepFailure)
+                     InjectedCrash, StepFailure)
 from .kvcache import (SlotKVCache, clear_slot, dequantize_kv,
                       init_slot_cache, occupied_slots, quantize_kv,
                       quantize_kv_static, rollback_slot, write_prefill)
+from .recovery import (IntegrityError, RequestJournal, compact_journal,
+                       read_snapshot)
 from .scheduler import (EngineRequest, Scheduler, SubmitError,
                         admission_set_point)
 
 __all__ = ["Engine", "EngineConfig", "EngineRequest", "Scheduler",
            "SubmitError", "admission_set_point", "FaultSpec",
            "FaultInjector", "DegradationLadder", "StepFailure",
+           "InjectedCrash", "IntegrityError", "RequestJournal",
+           "compact_journal", "read_snapshot",
            "SlotKVCache", "SpecDecoder", "init_slot_cache", "write_prefill",
            "clear_slot", "rollback_slot", "occupied_slots", "quantize_kv",
            "quantize_kv_static", "dequantize_kv"]

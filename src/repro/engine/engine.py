@@ -271,6 +271,23 @@ class EngineConfig:
                                         # testing). None = no injection;
                                         # the retry/quarantine machinery
                                         # is always on regardless
+    # --- crash safety (engine/recovery.py, DESIGN.md §13) --------------
+    journal_path: Optional[str] = None  # append-only JSONL WAL of request
+                                        # lifecycle transitions, fsync'd
+                                        # once per step — the replay
+                                        # source for crash recovery.
+                                        # None = no journal
+    journal_resume: bool = False        # append to an existing journal
+                                        # (recovery/supervisor restart)
+                                        # instead of starting a fresh one
+    snapshot_path: Optional[str] = None # directory Engine.snapshot()
+                                        # writes (atomic tmp + rename);
+                                        # with snapshot_every, the engine
+                                        # auto-snapshots here
+    snapshot_every: int = 0             # >0: snapshot every N steps at
+                                        # the end-of-step boundary (after
+                                        # the journal fsync, so snapshot
+                                        # state ⊆ journal horizon)
 
 
 class Engine:
@@ -335,7 +352,7 @@ class Engine:
         self.registry = None
         self._mx = None
         if registry is not None or ecfg.metrics:
-            from repro.obs.metrics import MetricsRegistry
+            from repro.obs.metrics import MetricsRegistry, RESTORE_BUCKETS_S
             self.registry = registry if registry is not None \
                 else MetricsRegistry()
             r = self.registry
@@ -382,6 +399,23 @@ class Engine:
                 "degr_transitions": r.counter(
                     "engine_degradation_transitions",
                     "degradation-ladder rung changes"),
+                # crash safety (engine/recovery.py, DESIGN.md §13) —
+                # registered unconditionally so a box that never crashes
+                # still exports the zeros an alert can sit on
+                "snapshots": r.counter(
+                    "engine_snapshots",
+                    "engine state snapshots written (atomic tmp+rename)"),
+                "restores": r.counter(
+                    "engine_restore",
+                    "engine state restores from a snapshot"),
+                "replayed": r.counter(
+                    "engine_journal_replayed_requests",
+                    "un-retired requests resumed or re-enqueued by "
+                    "journal replay after a restore"),
+                "restore_s": r.histogram(
+                    "engine_restore_duration_s",
+                    "snapshot restore + journal replay wall time",
+                    buckets=RESTORE_BUCKETS_S),
             }
             # rung 0 is a real state, not "unset" — render it from the
             # start (to_prometheus omits unset gauges)
@@ -400,10 +434,22 @@ class Engine:
                         f"kv_{side}_occupancy",
                         f"sampled {side.upper()}-cache code-range use "
                         f"(scale drifted wide when trending down)")
+        # --- crash safety (engine/recovery.py, DESIGN.md §13) -----------
+        # the journal is a WAL, not a trace: always written when
+        # configured, fsync'd once per step boundary in step()
+        self.journal = None
+        if ecfg.journal_path:
+            from .recovery import RequestJournal
+            self.journal = RequestJournal(
+                ecfg.journal_path, clock=clock,
+                meta={"arch": cfg.name, "n_slots": ecfg.n_slots,
+                      "kv_mode": ecfg.kv_mode, "spec_k": ecfg.spec_k},
+                resume=ecfg.journal_resume)
         self.sched = Scheduler(ecfg.n_slots, clock=clock,
                                tracer=self.tracer, registry=self.registry,
                                max_queue=ecfg.max_queue,
-                               overload_policy=ecfg.overload_policy)
+                               overload_policy=ecfg.overload_policy,
+                               journal=self.journal)
         # --- fault tolerance (engine/faults.py, DESIGN.md §12) ----------
         self._faults = (FaultInjector(ecfg.fault_spec)
                         if ecfg.fault_spec else None)
@@ -620,6 +666,22 @@ class Engine:
         self._pos[slot] = 0
         self._last_tok[slot] = 0
 
+    def _evict_slot(self, slot: int):
+        """Recovery-only (engine/recovery.py): drop a restored slot whose
+        request the journal proves already retired after the snapshot was
+        taken — clear the cache row and host state WITHOUT a second
+        retire, so exactly-once holds across the crash."""
+        if slot in self.sched._prefilling:
+            self.sched._prefilling.remove(slot)
+        self.sched.slots[slot] = None
+        self.cache = self._clear(self.cache, jnp.int32(slot))
+        if self._spec is not None:
+            self._spec.clear(slot)
+        self._pos[slot] = 0
+        self._last_tok[slot] = 0
+        self._prefill_prog[slot] = 0
+        self._fail_streak[slot] = 0
+
     def _start_decoding(self, slot: int, req: EngineRequest, logits_row,
                         S: int):
         """Shared admission tail: sample the FIRST generated token from the
@@ -629,6 +691,8 @@ class Engine:
         req.t_first_token = self.clock()
         if self.tracer:
             self.tracer.event("first_token", uid=req.uid, slot=slot)
+        if self.journal:
+            self.journal.event("first_token", uid=req.uid, slot=slot)
         if first == self.ecfg.eos_id:                 # eos is never emitted
             self._retire(slot, "eos")
             return
@@ -1000,6 +1064,15 @@ class Engine:
         if self._t_start is None:
             self._t_start = self.clock()
         t_step0 = self.clock()
+        # --- injected process death (faults.crash_rate, §13) -----------
+        # drawn before ANY step work: the journal's durability horizon is
+        # the step boundary, so flush whatever arrived since the last
+        # step's fsync (client submits land between steps) and die —
+        # recovery then sees exactly the pre-step state
+        if self._faults is not None and self._faults.draw_crash():
+            if self.journal:
+                self.journal.sync()
+            self._faults.crash()
         n_done_before = len(self.sched.finished)
         # decoders that were ALREADY mid-generation when this step's
         # prefill work ran — the requests a prefill stall actually delays
@@ -1141,7 +1214,68 @@ class Engine:
             tr.span_end("step", t_step0,
                         prefill_tokens=prefill_tokens,
                         decode_slots=n_decoding_before)
+        # --- crash safety (§13): make the boundary durable --------------
+        # journal fsync FIRST, then the periodic snapshot — so a snapshot
+        # never holds state the journal hasn't seen (snapshot ⊆ WAL)
+        if self.journal is not None:
+            self.journal.sync()
+        if self.ecfg.snapshot_every and self.ecfg.snapshot_path \
+                and len(self.step_s) % self.ecfg.snapshot_every == 0:
+            self.snapshot()
         return self.sched.finished[n_done_before:]
+
+    # ------------------------------------------------- crash safety ------
+    def snapshot(self, path: Optional[str] = None) -> str:
+        """Write the full serving state (quantized slot cache, draft
+        twin, scheduler queue + slot table, host decode state, PRNG key)
+        to ``path`` atomically (engine/recovery.py, DESIGN.md §13)."""
+        from .recovery import snapshot_engine
+        path = path if path is not None else self.ecfg.snapshot_path
+        if not path:
+            raise ValueError("snapshot needs a path (argument or "
+                             "EngineConfig.snapshot_path)")
+        out = snapshot_engine(self, path)
+        if self._mx:
+            self._mx["snapshots"].inc()
+        if self.journal:
+            self.journal.event("snapshot", step=len(self.step_s))
+        return out
+
+    def restore(self, path: str) -> dict:
+        """Restore serving state from a snapshot into this (freshly
+        constructed, idle) engine. Integrity-validated: checksums, code
+        ranges, kv_pos invariants — raises ``IntegrityError`` rather
+        than serve a corrupt artifact. Returns the snapshot manifest."""
+        from .recovery import restore_engine
+        t0 = self.clock()
+        manifest = restore_engine(self, path)
+        if self._mx:
+            self._mx["restores"].inc()
+            self._mx["restore_s"].observe(self.clock() - t0)
+        return manifest
+
+    def recover(self, snapshot_path: Optional[str] = None,
+                journal_path: Optional[str] = None) -> dict:
+        """Snapshot restore + journal replay: resume what the snapshot
+        holds, re-enqueue journal submissions past the snapshot horizon,
+        evict anything the journal proves already retired. Either source
+        may be absent (journal-only recovery re-prefills everything).
+        Returns recovery.recover_engine's summary dict."""
+        from .recovery import recover_engine
+        t0 = self.clock()
+        info = recover_engine(
+            self,
+            snapshot_path if snapshot_path is not None
+            else self.ecfg.snapshot_path,
+            journal_path if journal_path is not None
+            else self.ecfg.journal_path)
+        if self._mx:
+            if info["manifest"] is not None:
+                self._mx["restores"].inc()
+            self._mx["replayed"].inc(info["n_restored"]
+                                     + info["n_requeued"])
+            self._mx["restore_s"].observe(self.clock() - t0)
+        return info
 
     def drain(self, timeout_s: Optional[float] = None,
               stall_steps: int = 10_000) -> list[EngineRequest]:

@@ -42,6 +42,8 @@ the engine consumes:
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 import time
 from typing import Optional
 
@@ -67,6 +69,17 @@ class InjectedFault(StepFailure):
     to a slot — it models the dispatch itself failing)."""
 
 
+class InjectedCrash(BaseException):
+    """Injected PROCESS DEATH at a step boundary (engine/recovery.py).
+
+    Deliberately a ``BaseException``: unlike :class:`StepFailure` this
+    models the whole process dying, so the engine's retry machinery (and
+    any stray ``except Exception``) must not be able to absorb it — only
+    a supervisor that restarts + recovers may catch it. With
+    ``crash_kill=1`` the injector SIGKILLs the process instead, the
+    real thing for cross-process recovery smoke tests."""
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """Injection configuration; all rates are per-step (or per-submit
@@ -78,6 +91,15 @@ class FaultSpec:
     slow_step_rate: float = 0.0
     slow_step_s: float = 0.005
     poison_rate: float = 0.0
+    #: per-step-boundary probability of process death (raises
+    #: :class:`InjectedCrash`, or SIGKILLs when ``crash_kill``) — drawn
+    #: BEFORE any step work, right after the previous step's journal
+    #: fsync, so the crash always lands exactly on the WAL's durability
+    #: horizon
+    crash_rate: float = 0.0
+    #: crash via ``os.kill(getpid(), SIGKILL)`` instead of raising —
+    #: real process death for cross-process recovery tests
+    crash_kill: bool = False
     #: stop injecting step-level faults after this many total events
     #: (None = unbounded) — lets a storm settle so drains terminate
     #: even at extreme rates
@@ -87,13 +109,15 @@ class FaultSpec:
     _KEYS = {"seed": "seed", "exception": "step_exception_rate",
              "nan": "nan_logits_rate", "slow": "slow_step_rate",
              "slow_s": "slow_step_s", "poison": "poison_rate",
+             "crash": "crash_rate", "crash_kill": "crash_kill",
              "max": "max_faults"}
 
     @classmethod
     def parse(cls, spec: str) -> "FaultSpec":
         """Build from a ``k=v,k=v`` CLI string, e.g.
         ``"exception=0.05,nan=0.05,poison=0.1,seed=3"``. Keys:
-        exception / nan / slow / slow_s / poison / seed / max."""
+        exception / nan / slow / slow_s / poison / crash / crash_kill /
+        seed / max."""
         kw = {}
         for part in filter(None, (p.strip() for p in spec.split(","))):
             if "=" not in part:
@@ -104,8 +128,12 @@ class FaultSpec:
             if field is None:
                 raise ValueError(f"unknown fault spec key {k.strip()!r} "
                                  f"(known: {sorted(cls._KEYS)})")
-            kw[field] = (int(v) if field in ("seed", "max_faults")
-                         else float(v))
+            if field in ("seed", "max_faults"):
+                kw[field] = int(v)
+            elif field == "crash_kill":
+                kw[field] = bool(int(v))
+            else:
+                kw[field] = float(v)
         return cls(**kw)
 
 
@@ -123,12 +151,13 @@ class FaultInjector:
         self.n_step_exceptions = 0
         self.n_token_corruptions = 0
         self.n_slow_steps = 0
+        self.n_crashes = 0
 
     def injected_total(self) -> int:
         """Step-level fault events so far (poisoned submissions are
         request marks, not events — quarantine bounds their damage)."""
         return (self.n_step_exceptions + self.n_token_corruptions
-                + self.n_slow_steps)
+                + self.n_slow_steps + self.n_crashes)
 
     def _budget_left(self) -> bool:
         return (self.spec.max_faults is None
@@ -157,6 +186,29 @@ class FaultInjector:
                 return "slow"
         return None
 
+    def draw_crash(self) -> bool:
+        """Draw process death for the step boundary about to start.
+
+        Consumes rng only when ``crash_rate`` is set, so enabling other
+        fault classes alone leaves their seeded streams untouched."""
+        s = self.spec
+        if s.crash_rate <= 0 or not self._budget_left():
+            return False
+        if self.rng.uniform() < s.crash_rate:
+            self.n_crashes += 1
+            return True
+        return False
+
+    def crash(self) -> None:
+        """Die. SIGKILL under ``crash_kill`` (no cleanup, no atexit —
+        the genuine article), else raise :class:`InjectedCrash` for an
+        in-process supervisor to field."""
+        if self.spec.crash_kill:
+            os.kill(os.getpid(), signal.SIGKILL)
+        raise InjectedCrash(
+            f"injected process crash at step boundary "
+            f"(crash #{self.n_crashes})")
+
     def sleep(self) -> None:
         time.sleep(self.spec.slow_step_s)
 
@@ -181,6 +233,7 @@ class FaultInjector:
         return {"step_exceptions": self.n_step_exceptions,
                 "token_corruptions": self.n_token_corruptions,
                 "slow_steps": self.n_slow_steps,
+                "crashes": self.n_crashes,
                 "poisoned_submissions": len(self.poison_uids)}
 
 

@@ -42,10 +42,16 @@ from repro.core.quantize import QuantConfig, dequantize, qparams, quantize, \
 
 KV_QCFG = QuantConfig(bits=8, symmetric=False)
 
+#: Data leaves of SlotKVCache in declaration order — the serialization
+#: contract used by engine snapshot/restore (engine/recovery.py): these
+#: and only these arrays are persisted; mode/qchunks/static are manifest
+#: metadata.
+CACHE_DATA_FIELDS = ("k", "v", "kv_pos", "k_scale", "k_zero",
+                     "v_scale", "v_zero")
+
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("k", "v", "kv_pos", "k_scale", "k_zero",
-                                "v_scale", "v_zero"),
+                   data_fields=CACHE_DATA_FIELDS,
                    meta_fields=("mode", "qchunks", "static"))
 @dataclasses.dataclass
 class SlotKVCache:

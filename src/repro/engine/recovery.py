@@ -1,0 +1,611 @@
+"""Crash-safe serving: journal, snapshot/restore, integrity validation.
+
+Three cooperating pieces (DESIGN.md §13):
+
+1. ``RequestJournal`` — an append-only JSONL write-ahead log of request
+   lifecycle transitions (submit / admit / first_token / retire), written
+   in the tracer's record format (``obs/tracer.py``) so the merged
+   journal of a crashed run plus its recovery run validates under
+   ``trace_report --validate`` unchanged.  Appends are buffered in
+   memory and made durable once per engine step via ``sync()``
+   (write + flush + fsync): the durability horizon is the last step
+   boundary, which is exactly where the crash fault fires.
+
+2. ``snapshot_engine`` / ``restore_engine`` — serialize the live engine
+   (quantized slot cache, draft-twin cache, scheduler queue + slot
+   table, host-side decode state, PRNG key) to a directory written
+   atomically (tmp dir + ``os.rename``, same protocol as
+   ``checkpoint/ckpt.py``) with a manifest carrying per-array CRC32
+   checksums, the provenance header, and an engine-geometry fingerprint.
+
+3. ``IntegrityError`` + the shared validators — one set of checks used
+   by snapshot restore, ``checkpoint.ckpt.restore`` and
+   ``QuantRecipe.load``: byte checksums, INT8 code-range invariants,
+   finite (and positive, where required) scales, and the ``kv_pos``
+   invariant (every entry is -1 or exactly its own time index — the
+   engine only ever writes position t at row t).  SplitQuant's compact
+   storage makes these checks *exact*: any drift is corruption, never
+   quantization slop, so the validator fails loudly instead of serving
+   garbage.
+
+``recover_engine`` composes the pieces: restore the snapshot (if any),
+then replay the journal against it — requests retired after the
+snapshot are cleared (their output lives in the journal; exactly-once
+holds across the crash), requests alive in the snapshot resume from
+their quantized KV state, and requests submitted past the snapshot
+horizon are re-enqueued from their journal submit record and re-prefill
+from scratch.  Greedy decoding is a pure function of the committed
+prefix, so resumed requests regenerate post-snapshot tokens
+bit-identically (the same property PR 8's rollback-retry relies on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+import zlib
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SNAPSHOT_SCHEMA = 1
+
+# arrays.npz key prefixes
+_CACHE = "cache/"
+_DRAFT = "draft/"
+_HOST = "host/"
+
+
+# --------------------------------------------------------------------------
+# integrity primitives (shared by snapshot restore, ckpt restore and
+# QuantRecipe load)
+# --------------------------------------------------------------------------
+
+class IntegrityError(RuntimeError):
+    """A loaded artifact failed validation and must not be served.
+
+    ``reason`` is a stable machine-readable tag: one of ``checksum``,
+    ``missing_array``, ``schema``, ``config_mismatch``, ``code_range``,
+    ``nonfinite``, ``nonpositive_scale``, ``kv_pos_invalid``.
+    """
+
+    def __init__(self, reason: str, msg: str):
+        super().__init__(f"[{reason}] {msg}")
+        self.reason = reason
+
+
+def array_checksum(a: np.ndarray) -> str:
+    """CRC32 over dtype + shape + raw bytes, as ``crc32:xxxxxxxx``."""
+    a = np.ascontiguousarray(a)
+    h = zlib.crc32(repr((a.dtype.str, a.shape)).encode())
+    h = zlib.crc32(a.tobytes(), h)
+    return f"crc32:{h:08x}"
+
+
+def checksum_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, str]:
+    return {k: array_checksum(np.asarray(v)) for k, v in arrays.items()}
+
+
+def verify_checksums(arrays: Dict[str, np.ndarray],
+                     want: Dict[str, str], context: str = "") -> None:
+    """Compare stored checksums against the loaded arrays; loud on drift."""
+    ctx = f"{context}: " if context else ""
+    for name, expect in want.items():
+        if name not in arrays:
+            raise IntegrityError("missing_array",
+                                 f"{ctx}array {name!r} in manifest but "
+                                 f"missing from archive")
+        got = array_checksum(np.asarray(arrays[name]))
+        if got != expect:
+            raise IntegrityError("checksum",
+                                 f"{ctx}{name}: stored {expect}, "
+                                 f"recomputed {got} — artifact corrupt")
+
+
+def check_finite(name: str, a: np.ndarray, context: str = "") -> None:
+    a = np.asarray(a)
+    if a.size and not np.all(np.isfinite(a)):
+        ctx = f"{context}: " if context else ""
+        n = int(np.sum(~np.isfinite(a)))
+        raise IntegrityError("nonfinite",
+                             f"{ctx}{name} has {n} non-finite entries")
+
+
+def check_positive(name: str, a: np.ndarray, context: str = "") -> None:
+    check_finite(name, a, context)
+    a = np.asarray(a)
+    if a.size and not np.all(a > 0):
+        ctx = f"{context}: " if context else ""
+        raise IntegrityError("nonpositive_scale",
+                             f"{ctx}{name} has entries <= 0 "
+                             f"(min {float(a.min())})")
+
+
+def check_code_range(name: str, codes: np.ndarray, bits: int,
+                     context: str = "") -> None:
+    """Quantized codes must lie within the signed ``bits``-bit levels."""
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    c = np.asarray(codes)
+    if c.size == 0:
+        return
+    lo, hi = int(c.min()), int(c.max())
+    if lo < qmin or hi > qmax:
+        ctx = f"{context}: " if context else ""
+        raise IntegrityError("code_range",
+                             f"{ctx}{name} codes span [{lo}, {hi}], "
+                             f"outside int{bits} range [{qmin}, {qmax}]")
+
+
+def validate_cache_arrays(arrays: Dict[str, np.ndarray], mode: str,
+                          prefix: str = _CACHE, context: str = "") -> None:
+    """Invariant checks for a (snapshotted) SlotKVCache's arrays.
+
+    - ``kv_pos[l, n, t]`` is either -1 (empty) or exactly ``t``: the
+      engine writes position t at row t and never wraps, so any other
+      value is corruption.
+    - int8 modes: codes within the 8-bit levels, scales finite and
+      positive, zero-points finite.
+    """
+    ctx = f"{context}: " if context else ""
+    pos = np.asarray(arrays[prefix + "kv_pos"])
+    T = pos.shape[-1]
+    t = np.arange(T, dtype=pos.dtype)
+    bad = ~((pos == -1) | (pos == t))
+    if bad.any():
+        l, n, tt = (int(x[0]) for x in np.nonzero(bad))
+        raise IntegrityError("kv_pos_invalid",
+                             f"{ctx}kv_pos[{l},{n},{tt}] = "
+                             f"{int(pos[l, n, tt])}, expected -1 or {tt}")
+    if mode == "int8":
+        from .kvcache import KV_QCFG
+        for kk in ("k", "v"):
+            check_code_range(prefix + kk, arrays[prefix + kk],
+                             KV_QCFG.bits, context)
+        for kk in ("k_scale", "v_scale"):
+            check_positive(prefix + kk, arrays[prefix + kk], context)
+        for kk in ("k_zero", "v_zero"):
+            check_finite(prefix + kk, arrays[prefix + kk], context)
+
+
+# --------------------------------------------------------------------------
+# durable request journal
+# --------------------------------------------------------------------------
+
+class RequestJournal:
+    """Append-only JSONL WAL of request lifecycle transitions.
+
+    Record format is the tracer's (``obs/tracer.py``): a single header
+    line (``kind=header``, ``schema=1``) followed by event lines
+    (``kind=event``, ``name`` in the ``obs/schema.py`` lifecycle
+    taxonomy).  Journal events carry extra replay payload the schema
+    validator permits: submit records hold the full prompt + budget +
+    class + deadlines, retire records hold the output token list (so a
+    supervisor can report pre-crash finishers without the engine).
+
+    ``event()`` buffers; ``sync()`` writes + flushes + fsyncs — the
+    engine calls it once per step, making the step boundary the
+    durability horizon.  Opening an existing journal (``resume=True``)
+    appends without a second header, so the merged crash+recovery file
+    stays a single valid trace.
+    """
+
+    def __init__(self, path: str, clock=time.perf_counter,
+                 meta: Optional[dict] = None, resume: bool = False):
+        self.path = path
+        self.clock = clock
+        self.t0 = clock()
+        self._buf: List[str] = []
+        append = resume and _has_journal_header(path)
+        self._f = open(path, "a" if append else "w")
+        if not append:
+            from ..obs.tracer import SCHEMA_VERSION
+            header = {"kind": "header", "schema": SCHEMA_VERSION,
+                      "journal": True, **(meta or {})}
+            self._f.write(json.dumps(header) + "\n")
+            self._flush_fsync()
+
+    def event(self, name: str, **fields) -> None:
+        rec = {"kind": "event", "name": name,
+               "ts": self.clock() - self.t0, **fields}
+        self._buf.append(json.dumps(rec))
+
+    def sync(self) -> None:
+        """Make every buffered record durable (write + flush + fsync)."""
+        if self._buf:
+            self._f.write("\n".join(self._buf) + "\n")
+            self._buf.clear()
+        self._flush_fsync()
+
+    def _flush_fsync(self) -> None:
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.sync()
+            self._f.close()
+
+    def __del__(self):  # best effort; sync() per step is the real contract
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def _has_journal_header(path: str) -> bool:
+    try:
+        with open(path) as f:
+            first = f.readline()
+        rec = json.loads(first)
+        return rec.get("kind") == "header"
+    except (OSError, ValueError):
+        return False
+
+
+def load_journal(path: str) -> List[dict]:
+    from ..obs.tracer import load_jsonl
+    return load_jsonl(path)
+
+
+def replay_journal(records: List[dict]) -> Tuple[Dict[int, dict],
+                                                 Dict[int, dict]]:
+    """Fold journal records into (submitted, retired) maps keyed by uid.
+
+    ``submitted[uid]`` is the submit record (prompt/budget/class/
+    deadlines — enough to re-enqueue); ``retired[uid]`` is the retire
+    record (reason + output tokens).  A uid present in both finished
+    before the crash and must not run again.
+    """
+    submitted: Dict[int, dict] = {}
+    retired: Dict[int, dict] = {}
+    for rec in records:
+        if rec.get("kind") != "event":
+            continue
+        name, uid = rec.get("name"), rec.get("uid")
+        if uid is None:
+            continue
+        if name == "submit":
+            submitted[int(uid)] = rec
+        elif name == "retire":
+            retired[int(uid)] = rec
+    return submitted, retired
+
+
+def compact_journal(path: str) -> Tuple[int, int]:
+    """Rewrite the journal dropping records made redundant by a retire.
+
+    Keeps the header, every record of un-retired uids (still needed for
+    replay), the retire records themselves (they carry the output and
+    pin exactly-once across restarts), and engine-scoped records
+    (snapshot/restore marks).  Atomic via tmp + ``os.replace``.
+    Returns (n_records_before, n_records_after).
+    """
+    records = load_journal(path)
+    _, retired = replay_journal(records)
+    kept = []
+    for rec in records:
+        if rec.get("kind") != "event":
+            kept.append(rec)
+            continue
+        uid = rec.get("uid")
+        if uid is not None and int(uid) in retired \
+                and rec.get("name") != "retire":
+            continue
+        kept.append(rec)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        for rec in kept:
+            f.write(json.dumps(rec) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return len(records), len(kept)
+
+
+# --------------------------------------------------------------------------
+# snapshot / restore
+# --------------------------------------------------------------------------
+
+def _req_doc(req) -> dict:
+    return {"uid": req.uid,
+            "prompt": [int(t) for t in req.prompt],
+            "max_new_tokens": int(req.max_new_tokens),
+            "out": [int(t) for t in req.out],
+            "cls": req.cls,
+            "ttft_deadline_s": req.ttft_deadline_s,
+            "deadline_s": req.deadline_s,
+            "has_first_token": req.t_first_token is not None}
+
+
+def _req_from_doc(doc: dict, clock) -> Any:
+    from .scheduler import EngineRequest
+    req = EngineRequest(uid=int(doc["uid"]),
+                        prompt=list(doc["prompt"]),
+                        max_new_tokens=int(doc["max_new_tokens"]),
+                        cls=doc.get("cls", "interactive"),
+                        ttft_deadline_s=doc.get("ttft_deadline_s"),
+                        deadline_s=doc.get("deadline_s"))
+    req.out = list(doc.get("out", []))
+    # wall-clock state does not survive a process: deadlines restart at
+    # restore time (documented in DESIGN.md §13)
+    req.t_submit = clock()
+    if doc.get("has_first_token"):
+        req.t_first_token = req.t_submit
+    return req
+
+
+def _engine_fingerprint(eng) -> dict:
+    ecfg = eng.ecfg
+    return {"arch": eng.cfg.name,
+            "n_slots": ecfg.n_slots,
+            "max_len": ecfg.max_len,
+            "kv_mode": eng.cache.mode,
+            "kv_static": eng.cache.static,
+            "kv_qchunks": eng.cache.qchunks,
+            "spec_k": ecfg.spec_k,
+            "draft_mode": (eng._spec.cache.mode
+                           if eng._spec is not None else None),
+            "vocab": eng.cfg.vocab}
+
+
+def _store_cache(cache, prefix: str) -> Tuple[Dict[str, np.ndarray],
+                                              Dict[str, str]]:
+    """(arrays, original dtypes) — bf16 widened to fp32 for npz storage."""
+    import jax.numpy as jnp
+    from .kvcache import CACHE_DATA_FIELDS
+    arrays, dtypes = {}, {}
+    for name in CACHE_DATA_FIELDS:
+        x = getattr(cache, name)
+        dtypes[prefix + name] = str(x.dtype)
+        if x.dtype == jnp.bfloat16:
+            x = x.astype(jnp.float32)
+        arrays[prefix + name] = np.asarray(x)
+    return arrays, dtypes
+
+
+def _load_cache(like, arrays: Dict[str, np.ndarray],
+                dtypes: Dict[str, str], prefix: str):
+    import jax.numpy as jnp
+    from .kvcache import CACHE_DATA_FIELDS
+    repl = {}
+    for name in CACHE_DATA_FIELDS:
+        key = prefix + name
+        if key not in arrays:
+            raise IntegrityError("missing_array",
+                                 f"snapshot missing {key!r}")
+        want = getattr(like, name)
+        x = jnp.asarray(arrays[key], dtype=jnp.dtype(dtypes[key]))
+        if x.shape != want.shape:
+            raise IntegrityError("config_mismatch",
+                                 f"{key}: snapshot shape {x.shape} != "
+                                 f"engine shape {want.shape}")
+        repl[name] = x
+    return dataclasses.replace(like, **repl)
+
+
+def snapshot_engine(eng, path: str) -> str:
+    """Write the engine's full serving state to ``path``, atomically.
+
+    Layout mirrors ``checkpoint/ckpt.py``: a tmp directory holding
+    ``arrays.npz`` + ``manifest.json`` (fsync'd) is ``os.rename``d over
+    ``path`` — a crash mid-write leaves either the old snapshot or none,
+    never a torn one.  The manifest carries per-array checksums, the
+    provenance header and an engine-geometry fingerprint that restore
+    validates before touching any array.
+    """
+    from ..obs.provenance import provenance
+
+    arrays, dtypes = _store_cache(eng.cache, _CACHE)
+    if eng._spec is not None:
+        d_arrays, d_dtypes = _store_cache(eng._spec.cache, _DRAFT)
+        arrays.update(d_arrays)
+        dtypes.update(d_dtypes)
+    arrays[_HOST + "last_tok"] = np.asarray(eng._last_tok)
+    arrays[_HOST + "pos"] = np.asarray(eng._pos)
+    arrays[_HOST + "prefill_prog"] = np.asarray(eng._prefill_prog)
+    arrays[_HOST + "fail_streak"] = np.asarray(eng._fail_streak)
+    arrays[_HOST + "rng"] = np.asarray(eng.rng)
+    for k in (_HOST + "last_tok", _HOST + "pos", _HOST + "prefill_prog",
+              _HOST + "fail_streak", _HOST + "rng"):
+        dtypes[k] = str(arrays[k].dtype)
+
+    sched = eng.sched
+    manifest = {
+        "schema": SNAPSHOT_SCHEMA,
+        "provenance": provenance(),
+        "engine": _engine_fingerprint(eng),
+        "checksums": checksum_arrays(arrays),
+        "dtypes": dtypes,
+        "step": len(eng.step_s),
+        "uid_next": eng._uid,
+        "any_deadlines": eng._any_deadlines,
+        "n_submitted": sched.n_submitted,
+        "n_admitted": sched.n_admitted,
+        "queue": [_req_doc(r) for r in sched.queue],
+        "slots": [None if r is None else _req_doc(r) for r in sched.slots],
+        "prefilling": list(sched._prefilling),
+    }
+
+    final = os.path.abspath(path)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def read_snapshot(path: str) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Load and integrity-check a snapshot directory (no engine needed).
+
+    Validates schema version, per-array checksums and the cache
+    invariants; raises ``IntegrityError`` before any array could reach
+    an engine.
+    """
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise IntegrityError("schema", f"{path}: no manifest.json — "
+                             f"not a snapshot directory")
+    except ValueError as e:
+        raise IntegrityError("schema", f"{mpath}: corrupt JSON ({e})")
+    if manifest.get("schema") != SNAPSHOT_SCHEMA:
+        raise IntegrityError("schema",
+                             f"{mpath}: snapshot schema "
+                             f"{manifest.get('schema')!r}, expected "
+                             f"{SNAPSHOT_SCHEMA}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    verify_checksums(arrays, manifest["checksums"], context=path)
+    eng_meta = manifest["engine"]
+    validate_cache_arrays(arrays, eng_meta["kv_mode"],
+                          prefix=_CACHE, context=path)
+    if _DRAFT + "kv_pos" in arrays:
+        validate_cache_arrays(arrays, eng_meta.get("draft_mode") or "fp",
+                              prefix=_DRAFT, context=path)
+    return manifest, arrays
+
+
+def restore_engine(eng, path: str) -> dict:
+    """Restore ``eng`` (freshly constructed, idle) from a snapshot.
+
+    The caller constructs the engine with the same config the snapshot
+    was taken under (the manifest fingerprint is cross-checked), then
+    this replaces the cache(s), host decode state, PRNG key, scheduler
+    queue + slot table and uid counter.  Returns the manifest.
+    """
+    import jax.numpy as jnp
+
+    manifest, arrays = read_snapshot(path)
+    want = _engine_fingerprint(eng)
+    got = manifest["engine"]
+    if got != want:
+        diff = {k: (got.get(k), want[k]) for k in want
+                if got.get(k) != want[k]}
+        raise IntegrityError("config_mismatch",
+                             f"{path}: snapshot engine geometry differs "
+                             f"from this engine: {diff} "
+                             f"(snapshot, engine)")
+    has_draft = _DRAFT + "kv_pos" in arrays
+    if has_draft != (eng._spec is not None):
+        raise IntegrityError("config_mismatch",
+                             f"{path}: snapshot draft-cache presence "
+                             f"({has_draft}) does not match engine "
+                             f"spec_k={eng.ecfg.spec_k}")
+
+    dtypes = manifest["dtypes"]
+    eng.cache = _load_cache(eng.cache, arrays, dtypes, _CACHE)
+    if has_draft:
+        eng._spec.cache = _load_cache(eng._spec.cache, arrays, dtypes,
+                                      _DRAFT)
+
+    eng._last_tok = np.array(arrays[_HOST + "last_tok"])
+    eng._pos = np.array(arrays[_HOST + "pos"])
+    eng._prefill_prog = np.array(arrays[_HOST + "prefill_prog"])
+    eng._fail_streak = np.array(arrays[_HOST + "fail_streak"])
+    eng.rng = jnp.asarray(arrays[_HOST + "rng"],
+                          dtype=jnp.dtype(dtypes[_HOST + "rng"]))
+    eng._uid = int(manifest["uid_next"])
+    eng._any_deadlines = bool(manifest["any_deadlines"])
+
+    sched = eng.sched
+    sched.queue = deque(_req_from_doc(d, eng.clock)
+                        for d in manifest["queue"])
+    sched.slots = [None if d is None else _req_from_doc(d, eng.clock)
+                   for d in manifest["slots"]]
+    sched._prefilling = list(manifest["prefilling"])
+    sched.n_submitted = int(manifest["n_submitted"])
+    sched.n_admitted = int(manifest["n_admitted"])
+    return manifest
+
+
+def recover_engine(eng, snapshot_path: Optional[str],
+                   journal_path: Optional[str]) -> dict:
+    """Restore a snapshot and reconcile it against the journal.
+
+    Reconciliation, per journal uid:
+      - retired            -> finished before the crash: its output lives
+                              in the retire record; if the snapshot still
+                              holds it (retired after the snapshot was
+                              taken), evict it so it cannot run twice.
+      - alive in snapshot  -> resumes from its quantized KV state; tokens
+                              generated between snapshot and crash are
+                              regenerated identically (greedy decode is a
+                              pure function of the committed prefix).
+      - past the horizon   -> submitted after the snapshot: re-enqueued
+                              from the journal submit record, re-prefills
+                              from scratch.
+
+    Returns ``{"manifest", "retired", "n_restored", "n_requeued"}`` —
+    ``retired`` maps uid -> retire record so a supervisor can fold
+    pre-crash finishers into its final report (exactly-once across the
+    crash: those uids never re-enter the engine).
+    """
+    manifest = None
+    if snapshot_path and os.path.isdir(snapshot_path):
+        manifest = restore_engine(eng, snapshot_path)
+
+    submitted: Dict[int, dict] = {}
+    retired: Dict[int, dict] = {}
+    if journal_path and os.path.exists(journal_path):
+        submitted, retired = replay_journal(load_journal(journal_path))
+
+    sched = eng.sched
+
+    # evict anything the journal says already retired (exactly-once)
+    for uid, rec in retired.items():
+        for slot, req in enumerate(sched.slots):
+            if req is not None and req.uid == uid:
+                eng._evict_slot(slot)
+        sched.queue = deque(r for r in sched.queue if r.uid != uid)
+
+    n_restored = sum(1 for r in sched.slots if r is not None) \
+        + len(sched.queue)
+
+    # re-enqueue post-horizon submissions, in original uid order
+    present = {r.uid for r in sched.slots if r is not None} \
+        | {r.uid for r in sched.queue}
+    n_requeued = 0
+    for uid in sorted(submitted):
+        if uid in retired or uid in present:
+            continue
+        rec = submitted[uid]
+        req = _req_from_doc({"uid": uid, "prompt": rec["prompt"],
+                             "max_new_tokens": rec["budget"],
+                             "cls": rec.get("cls", "interactive"),
+                             "ttft_deadline_s": rec.get("ttft_deadline_s"),
+                             "deadline_s": rec.get("deadline_s")},
+                            eng.clock)
+        req.out = []
+        req.t_first_token = None
+        # straight onto the queue: already journaled at first submit, so
+        # no second submit record, no overload policy re-applied
+        sched.queue.append(req)
+        if req.ttft_deadline_s is not None or req.deadline_s is not None:
+            eng._any_deadlines = True
+        n_requeued += 1
+
+    # fresh uids must never collide with journaled ones
+    top = max(submitted, default=-1)
+    eng._uid = max(eng._uid, top + 1)
+
+    if eng.journal is not None:
+        eng.journal.event("restore",
+                          snapshot_step=(manifest or {}).get("step"),
+                          n_restored=n_restored, n_requeued=n_requeued,
+                          n_retired_in_journal=len(retired))
+        eng.journal.sync()
+    return {"manifest": manifest, "retired": retired,
+            "n_restored": n_restored, "n_requeued": n_requeued}

@@ -93,7 +93,7 @@ class Scheduler:
 
     def __init__(self, n_slots: int, clock=time.perf_counter, tracer=None,
                  registry=None, max_queue: int = 0,
-                 overload_policy: str = "reject-new"):
+                 overload_policy: str = "reject-new", journal=None):
         self.n_slots = n_slots
         self.clock = clock
         # admission control: 0 = unbounded queue (the historical
@@ -108,6 +108,12 @@ class Scheduler:
         # submit/admit/retire transitions so it emits those events.
         # Falsy tracers normalize to None — one branch per site disabled.
         self.tracer = tracer if tracer else None
+        # durable request journal (engine/recovery.py, DESIGN.md §13):
+        # the scheduler owns the submit/admit/retire transitions, so it
+        # writes their WAL records too. Unlike the tracer (a ring-buffer
+        # profiling mode) journal appends are buffered then fsync'd by
+        # the engine once per step — the crash-recovery replay source
+        self.journal = journal if journal else None
         self.queue: collections.deque[EngineRequest] = collections.deque()
         self.slots: list[Optional[EngineRequest]] = [None] * n_slots
         self.finished: list[EngineRequest] = []
@@ -194,6 +200,15 @@ class Scheduler:
                               prompt_len=int(len(req.prompt)),
                               budget=req.max_new_tokens,
                               queue_depth=len(self.queue))
+        if self.journal:
+            # the WAL submit record carries everything replay needs to
+            # re-enqueue the request from scratch (prompt included —
+            # the one place the full token list is persisted)
+            self.journal.event("submit", uid=req.uid,
+                              prompt=[int(t) for t in req.prompt],
+                              budget=req.max_new_tokens, cls=req.cls,
+                              ttft_deadline_s=req.ttft_deadline_s,
+                              deadline_s=req.deadline_s)
         if victim is not None:
             if victim is not req:
                 self.queue.remove(victim)
@@ -267,6 +282,8 @@ class Scheduler:
             if self.tracer:
                 self.tracer.event(
                     "admit", uid=req.uid, slot=slot, queued_s=queued_s)
+            if self.journal:
+                self.journal.event("admit", uid=req.uid, slot=slot)
         self.queue_depth_hist.append(len(self.queue))
         if self._mx:
             self._mx["depth"].set(len(self.queue))
@@ -308,6 +325,15 @@ class Scheduler:
             self.tracer.event("retire", uid=req.uid,
                               slot=-1 if slot is None else slot,
                               reason=reason, n_out=len(req.out))
+        if self.journal:
+            # retire records carry the OUTPUT tokens: after compaction
+            # they are the only trace of a finished request, and a
+            # recovering supervisor reports pre-crash finishers (and
+            # proves their token identity) straight from the WAL
+            self.journal.event("retire", uid=req.uid,
+                              slot=-1 if slot is None else slot,
+                              reason=reason, n_out=len(req.out),
+                              out=[int(t) for t in req.out])
 
     def drop_queued(self, req: EngineRequest, reason: str) -> None:
         """Finish a request that is still waiting in the queue (cancel,

@@ -152,6 +152,13 @@ class SpecDecoder:
             from repro.core import dequantize_tree
             draft_params = dequantize_tree(draft_params)
         self.params = draft_params
+        # the draft-twin cache is serving STATE, not a derived quantity:
+        # its rows must stay token-aligned with the target cache or the
+        # next verify window rolls back everything, so engine
+        # snapshot/restore (engine/recovery.py, DESIGN.md §13) persists
+        # and restores it alongside the target's under the "draft/"
+        # prefix — a spec engine restored without its twin would pay a
+        # silent full re-draft-prefill of every live slot
         self.cache = init_slot_cache(
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
             dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks)

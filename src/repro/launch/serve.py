@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import QuantConfig, QuantPolicy, quantize_tree
-from repro.engine import (Engine, EngineConfig, FaultSpec,
+from repro.engine import (Engine, EngineConfig, FaultSpec, InjectedCrash,
                           admission_set_point, occupied_slots)
 from repro.models import get_model
 from repro.runtime.serve_loop import Request, ServeConfig, Server
@@ -170,12 +170,56 @@ def main():
     ap.add_argument("--faults", default=None, metavar="SPEC",
                     help="seeded chaos injection, e.g. "
                          "'exception=0.05,nan=0.02,seed=3' (keys: "
-                         "exception, nan, slow, slow_s, poison, seed, "
-                         "max). Failed steps retry after KV rollback; "
-                         "slots that keep failing retire as 'failed'. "
-                         "Post-drain invariants (clean retire reasons, "
-                         "no slot-pool leak) are asserted. Engine only; "
-                         "incompatible with --spec-k")
+                         "exception, nan, slow, slow_s, poison, crash, "
+                         "crash_kill, seed, max). Failed steps retry "
+                         "after KV rollback; slots that keep failing "
+                         "retire as 'failed'; crash=p dies at a step "
+                         "boundary (recover with --supervise or "
+                         "--recover-from). Post-drain invariants (clean "
+                         "retire reasons, no slot-pool leak) are "
+                         "asserted. Engine only; incompatible with "
+                         "--spec-k")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="durable request journal (DESIGN.md §13): "
+                         "append-only JSONL WAL of submit/admit/"
+                         "first_token/retire transitions, fsync'd once "
+                         "per engine step — the replay source for crash "
+                         "recovery. Validates under trace_report "
+                         "--validate. Engine only (not --wave)")
+    ap.add_argument("--snapshot", default=None, metavar="DIR",
+                    help="engine state snapshot directory (atomic "
+                         "tmp+rename): quantized slot cache, draft twin, "
+                         "scheduler queue + slot table, host decode "
+                         "state, with per-array checksums in the "
+                         "manifest. Written every --snapshot-every steps")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="with --snapshot: snapshot every N engine steps "
+                         "at the end-of-step boundary (after the journal "
+                         "fsync). 0 = never automatically")
+    ap.add_argument("--recover-from", default=None, metavar="DIR",
+                    help="start by restoring this snapshot dir and "
+                         "replaying --journal against it (fresh-process "
+                         "recovery after a crash): snapshot-live "
+                         "requests resume from their quantized KV, "
+                         "journal submissions past the snapshot horizon "
+                         "re-prefill, already-retired uids are reported "
+                         "from the journal and never re-run. The dir "
+                         "may be absent (crash before the first "
+                         "snapshot) if --journal is given")
+    ap.add_argument("--supervise", type=int, default=0, metavar="N",
+                    help="in-process supervisor: on an injected crash "
+                         "(--faults crash=p), rebuild the engine, "
+                         "recover from --snapshot/--journal and keep "
+                         "serving, up to N restarts. Restarted engines "
+                         "run with the crash injector disarmed (the "
+                         "same seed would deterministically re-crash at "
+                         "the same boundary)")
+    ap.add_argument("--verify-recovery", action="store_true",
+                    help="after serving, re-run the same workload on an "
+                         "uncrashed reference engine and assert every "
+                         "normally-finished request's tokens are "
+                         "identical — the zero-divergence recovery "
+                         "proof (exits nonzero on mismatch)")
     ap.add_argument("--drain-timeout", type=float, default=None,
                     metavar="S",
                     help="drain watchdog: force-fail all outstanding "
@@ -332,22 +376,59 @@ def main():
             "--faults/--degrade/--max-queue are engine features — the "
             "wave loop has no retry, ladder, or admission control; "
             "drop --wave")
+    if args.wave and (args.journal or args.snapshot or args.recover_from
+                      or args.supervise or args.verify_recovery):
+        raise NotImplementedError(
+            "--journal/--snapshot/--recover-from/--supervise/"
+            "--verify-recovery are engine features — the wave loop has "
+            "no journal, snapshot, or recovery path; drop --wave")
+    if args.snapshot_every and not args.snapshot:
+        raise ValueError(
+            "--snapshot-every without --snapshot DIR has nowhere to "
+            "write — give a snapshot directory or drop the interval")
+    if args.supervise and not (args.journal or args.snapshot):
+        raise ValueError(
+            "--supervise has nothing to recover from — give --journal "
+            "and/or --snapshot (journal-only recovery re-prefills "
+            "everything; snapshots make restarts cheap)")
+    if args.recover_from and not os.path.isdir(args.recover_from) \
+            and not args.journal:
+        raise ValueError(
+            f"--recover-from: {args.recover_from!r} does not exist and "
+            f"no --journal was given — there is no state to recover")
     if args.max_queue == "auto":
         # size the bound from the committed open-loop knee: the p95
         # queue depth at the last sweep point that still attained its
         # SLO is the deepest backlog this box has been MEASURED to
-        # absorb — 2x that is the admission set point (DESIGN.md §12)
+        # absorb — 2x that is the admission set point (DESIGN.md §12).
+        # Every failure here is loud: 'auto' with no measurement would
+        # silently serve unbounded, which is the opposite of what the
+        # operator asked for
         root = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "..", "..", "..")
         bench = os.path.abspath(os.path.join(root, "BENCH_serve.json"))
-        max_queue = 0
+        regen = ("PYTHONPATH=src python benchmarks/serve_bench.py "
+                 "--requests 12")
+        import json as _json
         try:
-            import json as _json
             with open(bench) as f:
-                max_queue = admission_set_point(
-                    _json.load(f).get("open_loop") or {}) or 0
-        except (FileNotFoundError, ValueError):
-            pass
+                data = _json.load(f)
+        except FileNotFoundError:
+            raise SystemExit(
+                f"--max-queue auto: {bench} not found — the admission "
+                f"bound is sized from the measured open-loop saturation "
+                f"knee; run the serving benchmark once to produce it:\n"
+                f"  {regen}")
+        except ValueError as e:
+            raise SystemExit(
+                f"--max-queue auto: {bench} is not valid JSON ({e}) — "
+                f"regenerate it:\n  {regen}")
+        if "open_loop" not in data:
+            raise SystemExit(
+                f"--max-queue auto: {bench} has no 'open_loop' section "
+                f"(it predates the open-loop SLO sweep) — regenerate "
+                f"it:\n  {regen}")
+        max_queue = admission_set_point(data["open_loop"]) or 0
         print(f"admission: --max-queue auto -> "
               f"{max_queue or 'unbounded (no measured knee)'} "
               f"(from {bench})")
@@ -362,17 +443,30 @@ def main():
             print(f"req {r.uid}: {len(r.out)} tokens -> {r.out[:12]}")
         return
 
-    eng = Engine(cfg, params, EngineConfig(
-        n_slots=args.slots, max_len=256,
-        max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
-        kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
-        prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
-        draft_recipe=args.draft_recipe, metrics=not args.no_metrics,
-        trace=bool(args.trace), trace_kv_every=args.trace_kv_every,
-        max_queue=max_queue, overload_policy=args.overload_policy,
-        degrade=args.degrade,
-        fault_spec=FaultSpec.parse(args.faults) if args.faults else None),
-        kv_scales=kv_scales)
+    base_faults = FaultSpec.parse(args.faults) if args.faults else None
+
+    def mk_engine(registry=None, resume=False, faults=base_faults):
+        # rebuildable so the supervisor can replace a crashed engine
+        # in-process; `registry` carries metric counters across restarts
+        # (restore/replay counts must survive into --metrics-prom)
+        return Engine(cfg, params, EngineConfig(
+            n_slots=args.slots, max_len=256,
+            max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
+            kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
+            prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
+            draft_recipe=args.draft_recipe, metrics=not args.no_metrics,
+            trace=bool(args.trace), trace_kv_every=args.trace_kv_every,
+            max_queue=max_queue, overload_policy=args.overload_policy,
+            degrade=args.degrade, fault_spec=faults,
+            journal_path=args.journal, journal_resume=resume,
+            snapshot_path=args.snapshot,
+            snapshot_every=args.snapshot_every),
+            kv_scales=kv_scales, registry=registry)
+
+    # --recover-from is a fresh-process restart: the journal already
+    # holds this workload's submit records, so the WAL is appended to
+    # (resume) rather than truncated
+    eng = mk_engine(resume=args.recover_from is not None)
     writer = None
     if args.metrics_snapshot:
         from repro.kernels import act_quant
@@ -382,20 +476,57 @@ def main():
         # live act-quant clip-fraction gauges: the observed kernel
         # wrappers feed the registry through the existing probe hook
         act_quant.set_quality_probe(RegistryQuantProbe(eng.registry))
-    for p in prompts:
-        eng.submit(p)
-    if writer is None:
-        fin = eng.drain(timeout_s=args.drain_timeout,
-                        stall_steps=args.drain_stall_steps)
+    recovered = {}              # uid -> journal retire record (pre-crash)
+    if args.recover_from is not None:
+        info = eng.recover(args.recover_from, args.journal)
+        recovered.update(info["retired"])
+        print(f"recover: {info['n_restored']} live requests restored"
+              f"{' from snapshot' if info['manifest'] else ' (no snapshot)'}"
+              f", {info['n_requeued']} re-enqueued from the journal, "
+              f"{len(info['retired'])} already retired pre-crash")
     else:
+        for p in prompts:
+            eng.submit(p)
+
+    def run_to_drain(eng):
+        if writer is None:
+            return eng.drain(timeout_s=args.drain_timeout,
+                             stall_steps=args.drain_stall_steps)
         # step manually so snapshots land DURING the run (the point of
         # an open-ended soak), not just at drain
-        fin = []
         while not eng.sched.idle:
             eng.step()
             writer.maybe_write()
         writer.write()                            # final flush
-        fin = sorted(eng.sched.finished, key=lambda r: r.uid)
+        return sorted(eng.sched.finished, key=lambda r: r.uid)
+
+    restarts = 0
+    while True:
+        try:
+            fin = run_to_drain(eng)
+            break
+        except InjectedCrash as exc:
+            if restarts >= args.supervise:
+                raise
+            restarts += 1
+            print(f"supervisor: engine crashed ({exc}) — restart "
+                  f"{restarts}/{args.supervise}, recovering from "
+                  f"{'snapshot+journal' if args.snapshot else 'journal'}",
+                  flush=True)
+            # crash injector disarmed on restart: a fresh injector with
+            # the same seed would re-crash at the same step boundary,
+            # turning every supervised run into a restart-budget exhaust
+            import dataclasses as _dc
+            calm = _dc.replace(base_faults, crash_rate=0.0) \
+                if base_faults else None
+            eng = mk_engine(registry=eng.registry, resume=True,
+                            faults=calm)
+            info = eng.recover(args.snapshot, args.journal)
+            recovered.update(info["retired"])
+    for uid in sorted(recovered):
+        rec = recovered[uid]
+        print(f"req {uid}: {rec['n_out']} tokens ({rec['reason']}) "
+              f"-> {rec['out'][:12]}  (retired pre-crash, from journal)")
     for r in fin:
         # shed/failed/expired requests never produced a first token, so
         # ttft/tokens_per_s are None — a chaos run must not crash the
@@ -412,14 +543,22 @@ def main():
         # engine holds no residual state — a fault injector that leaks
         # slots or finish states would silently poison later admissions
         from repro.obs.schema import RETIRE_REASONS
-        reasons = sorted(r.finish_reason for r in eng.sched.finished)
+        reasons = sorted([r.finish_reason for r in eng.sched.finished]
+                         + [rec["reason"] for rec in recovered.values()])
         bad = [x for x in reasons if x not in RETIRE_REASONS]
         eng.sweep_idle_rows()       # idempotent; the manual-step path
         leak = occupied_slots(eng.cache)  # (snapshot writer) skips drain
         problems = []
-        if len(eng.sched.finished) != len(prompts):
-            problems.append(f"{len(eng.sched.finished)} finished != "
-                            f"{len(prompts)} submitted")
+        # exactly-once across incarnations: live finishes and journal-
+        # replayed retires must partition the workload, never overlap
+        live_uids = {r.uid for r in eng.sched.finished}
+        twice = sorted(live_uids & set(recovered))
+        if twice:
+            problems.append(f"uids retired twice (live + journal): "
+                            f"{twice}")
+        if len(live_uids | set(recovered)) != len(prompts):
+            problems.append(f"{len(live_uids | set(recovered))} retired "
+                            f"!= {len(prompts)} submitted")
         if bad:
             problems.append(f"non-schema retire reasons {bad}")
         if any(eng.sched.slots) or eng.sched.queue:
@@ -433,6 +572,38 @@ def main():
         if problems:
             raise SystemExit("chaos invariants VIOLATED: "
                              + "; ".join(problems))
+    if args.verify_recovery:
+        # zero-divergence proof (DESIGN.md §13): greedy decode is a
+        # pure function of (weights, prompt), so every request that
+        # finished normally — pre-crash from the journal, resumed from
+        # a snapshot, or re-prefilled after replay — must be token-
+        # identical to a run that never crashed
+        normal = ("eos", "budget", "max_len", "zero_budget")
+        ref = Engine(cfg, params, EngineConfig(
+            n_slots=args.slots, max_len=256,
+            max_new_tokens=args.max_new_tokens, kv_mode=args.kv_mode,
+            kv_qchunks=kv_qchunks, fused_attn=args.fused_attn,
+            prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
+            draft_recipe=args.draft_recipe, metrics=False),
+            kv_scales=kv_scales)
+        for p in prompts:
+            ref.submit(p)
+        ref_out = {r.uid: list(r.out) for r in ref.drain()}
+        got = {uid: (list(rec["out"]), rec["reason"])
+               for uid, rec in recovered.items()}
+        got.update({r.uid: (list(r.out), r.finish_reason) for r in fin})
+        survivors = sorted(u for u, (_, why) in got.items()
+                           if why in normal)
+        diverged = [u for u in survivors if got[u][0] != ref_out.get(u)]
+        if diverged:
+            raise SystemExit(
+                f"recovery verification FAILED: requests {diverged} "
+                f"diverged from the uncrashed reference run")
+        excl = len(got) - len(survivors)
+        print(f"recover: {len(survivors)} surviving requests verified "
+              f"token-identical to an uncrashed reference run"
+              + (f" ({excl} shed/failed/expired excluded)" if excl
+                 else ""))
     print(f"engine: {m['tokens_per_s']:.1f} tok/s, "
           f"util {m['slot_utilization']:.0%}, kv={m['kv_mode']}"
           f"{'/static' if m['kv_static_scales'] else ''} "

@@ -47,6 +47,13 @@ LATENCY_BUCKETS_S = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3,
 #: Default buckets for queue-depth-like counts.
 DEPTH_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 
+#: Buckets for crash-recovery durations (engine_restore_duration_s):
+#: coarser and wider than step latencies — a restore pays npz decompress
+#: + checksum verification + journal replay, and on a cold box can reach
+#: tens of seconds.
+RESTORE_BUCKETS_S = (1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25,
+                     0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
 
 def _fmt(v: float) -> str:
     """Prometheus float formatting: integers render bare, +Inf as the

@@ -25,7 +25,10 @@ Lifecycle vocabulary (``event`` names): ``submit``, ``admit``,
 ``first_token``, ``retire`` (with ``reason``), ``rollback``,
 ``cancel`` (the Engine.cancel call site; the matching retire carries
 reason "cancelled"), ``degrade`` (a degradation-ladder rung change —
-engine-scoped, so it carries ``rung``/``pressure`` instead of a uid).
+engine-scoped, so it carries ``rung``/``pressure`` instead of a uid),
+``snapshot`` / ``restore`` (crash-safety boundaries, DESIGN.md §13 —
+engine-scoped like ``degrade``; the request journal shares this schema,
+so a merged crash + recovery journal validates as one trace).
 
 Retire reasons split into the NORMAL terminals (eos / budget / max_len /
 zero_budget) and the POLICY terminals introduced by fault tolerance
@@ -43,7 +46,7 @@ PHASES = ("step", "prefill_oneshot", "prefill_chunk", "draft", "verify",
           "rollback", "accept_commit", "decode", "kv_sample")
 
 LIFECYCLE = ("submit", "admit", "first_token", "retire", "rollback",
-             "cancel", "degrade")
+             "cancel", "degrade", "snapshot", "restore")
 
 RETIRE_REASONS = ("eos", "budget", "max_len", "zero_budget",
                   "cancelled", "deadline_exceeded", "shed", "failed")

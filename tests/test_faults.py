@@ -537,18 +537,30 @@ def test_loadgen_robustness_fields_byte_identical():
     make_open_loop_workload = loadgen.make_open_loop_workload
     base = make_open_loop_workload(11, 20, 1000, 4.0)
     robo = make_open_loop_workload(11, 20, 1000, 4.0, cancel_rate=0.3,
-                                   deadlines=True)
+                                   deadlines=True, crash_rate=0.2)
     assert len(base) == len(robo) == 20
     for a, b in zip(base, robo):
         assert a.t == b.t and a.cls == b.cls
         assert a.max_new_tokens == b.max_new_tokens
         np.testing.assert_array_equal(a.prompt, b.prompt)
         assert a.cancel_t is None and a.ttft_deadline_s is None
-    # cancels: seeded, after arrival, within the delay window
+        assert a.crash_t is None
+    # cancels: seeded, after arrival, within the delay window — and
+    # byte-identical whether or not the LATER crash draws are enabled
+    # (crash draws append after cancel draws in the stream)
+    cancel_only = make_open_loop_workload(11, 20, 1000, 4.0,
+                                          cancel_rate=0.3, deadlines=True)
+    assert [b.cancel_t for b in robo] == \
+        [b.cancel_t for b in cancel_only]
     cancelled = [b for b in robo if b.cancel_t is not None]
     assert 0 < len(cancelled) < 20
     for b in cancelled:
         assert b.t + 0.05 <= b.cancel_t <= b.t + 0.5
+    # crash schedule: seeded, after arrival, within the delay window
+    crashes = [b for b in robo if b.crash_t is not None]
+    assert 0 < len(crashes) < 20
+    for b in crashes:
+        assert b.t + 0.02 <= b.crash_t <= b.t + 0.3
     # deadlines: deterministic from the class SLOs
     for b in robo:
         spec = CLASSES[b.cls]
@@ -557,5 +569,6 @@ def test_loadgen_robustness_fields_byte_identical():
                                 * spec["tpot_slo_s"]) * 8.0
     # and the robustness draws themselves are seed-reproducible
     again = make_open_loop_workload(11, 20, 1000, 4.0, cancel_rate=0.3,
-                                    deadlines=True)
+                                    deadlines=True, crash_rate=0.2)
     assert [b.cancel_t for b in robo] == [b.cancel_t for b in again]
+    assert [b.crash_t for b in robo] == [b.crash_t for b in again]

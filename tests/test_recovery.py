@@ -1,0 +1,574 @@
+"""Crash-safe serving (DESIGN.md §13): durable request journal, engine
+snapshot/restore of the quantized slot cache, integrity-validated
+artifact loading, and crash chaos + recovery.
+
+The load-bearing property is the END-TO-END one: a seeded workload is
+crashed at a random step boundary (the injected-crash fault), a FRESH
+engine recovers from the snapshot + journal, and every request that had
+not retired completes with tokens bit-identical to an uncrashed
+reference run — across fp / int8-dynamic / int8-static KV caches.
+Exactly-once retirement and an empty slot pool after replay come with
+it, and a snapshot with a single flipped byte must be rejected by the
+integrity validator, never served.
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import (Engine, EngineConfig, FaultSpec, InjectedCrash,
+                          IntegrityError, RequestJournal, compact_journal,
+                          occupied_slots, read_snapshot)
+from repro.engine.kvcache import CACHE_DATA_FIELDS
+from repro.engine.recovery import (array_checksum, check_code_range,
+                                   check_finite, check_positive,
+                                   checksum_arrays, load_journal,
+                                   replay_journal, validate_cache_arrays,
+                                   verify_checksums)
+from repro.models import get_model
+from repro.obs.schema import validate_events
+
+sys.path.append(os.path.join(os.path.dirname(__file__), "..",
+                             "benchmarks"))
+
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 48
+BUDGETS = [6, 1, 6, 4, 3, 6, 5]
+
+#: (kv_mode, use static scales) — the three cache configurations every
+#: crash/recovery property must hold under
+KV_MODES = [("fp", False), ("int8", False), ("int8", True)]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 14)))
+               for _ in range(7)]
+    return cfg, model, params, prompts
+
+
+@pytest.fixture(scope="module")
+def kv_scales(setup):
+    from repro.calib import collect_kv_stats, kv_static_scales
+    cfg, model, params, prompts = setup
+    rng = np.random.default_rng(0)
+    calib = [rng.integers(0, cfg.vocab, size=(4, MAX_LEN))
+             for _ in range(4)]
+    return kv_static_scales(collect_kv_stats(cfg, params, calib,
+                                             qchunks=4))
+
+
+def mk_ecfg(**kw):
+    base = dict(n_slots=3, max_len=MAX_LEN, prefill_bucket=8,
+                prefill_chunk=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def submit_all(eng, prompts):
+    for p, b in zip(prompts, BUDGETS):
+        eng.submit(p, max_new_tokens=b)
+
+
+# ================================================================ journal
+def test_journal_records_full_lifecycle(setup, tmp_path):
+    """Every request leaves submit/admit/first_token/retire records; the
+    journal is a valid trace file (header + schema'd events) and the
+    retire records carry the full output token list."""
+    cfg, model, params, prompts = setup
+    jpath = str(tmp_path / "journal.jsonl")
+    eng = Engine(cfg, params, mk_ecfg(journal_path=jpath))
+    submit_all(eng, prompts)
+    fin = {r.uid: list(r.out) for r in eng.drain()}
+    records = load_journal(jpath)
+    assert validate_events(records) == []
+    with open(jpath) as f:
+        header = json.loads(f.readline())
+    assert header["kind"] == "header" and header["journal"] is True
+    by_name = {}
+    for rec in records:
+        if rec.get("kind") == "event" and rec.get("uid") is not None:
+            by_name.setdefault(rec["name"], set()).add(rec["uid"])
+    for name in ("submit", "admit", "first_token", "retire"):
+        assert by_name[name] == set(fin), name
+    submitted, retired = replay_journal(records)
+    assert sorted(submitted) == sorted(fin)
+    for uid, out in fin.items():
+        assert retired[uid]["out"] == out
+        assert retired[uid]["n_out"] == len(out)
+        assert submitted[uid]["prompt"] == [int(t) for t in
+                                            prompts[uid]]
+        assert submitted[uid]["budget"] == BUDGETS[uid]
+
+
+def test_journal_compaction(setup, tmp_path):
+    """Compaction drops records made redundant by a retire but preserves
+    replay semantics exactly: same (submitted-unretired, retired) maps,
+    same retire payloads, still a single-header valid trace. A second
+    pass is a no-op (already compact)."""
+    cfg, model, params, prompts = setup
+    jpath = str(tmp_path / "journal.jsonl")
+    eng = Engine(cfg, params, mk_ecfg(journal_path=jpath))
+    submit_all(eng, prompts)
+    eng.drain()
+    before = load_journal(jpath)
+    _, retired_before = replay_journal(before)
+    n_before, n_after = compact_journal(jpath)
+    assert n_before == len(before) and n_after < n_before
+    after = load_journal(jpath)
+    assert validate_events(after) == []
+    assert len(after) == n_after
+    _, retired_after = replay_journal(after)
+    assert retired_after == retired_before
+    # every retired uid kept exactly its retire record
+    per_uid = {}
+    for rec in after:
+        if rec.get("kind") == "event" and rec.get("uid") is not None:
+            per_uid.setdefault(rec["uid"], []).append(rec["name"])
+    for uid in retired_before:
+        assert per_uid[uid] == ["retire"]
+    assert compact_journal(jpath) == (n_after, n_after)
+
+
+def test_journal_resume_single_header(tmp_path):
+    """Reopening with resume=True appends without a second header — the
+    merged crash+recovery journal stays one valid trace."""
+    jpath = str(tmp_path / "j.jsonl")
+    j1 = RequestJournal(jpath, meta={"arch": "t"})
+    j1.event("submit", uid=0, prompt=[1], budget=1, cls="interactive",
+             ttft_deadline_s=None, deadline_s=None)
+    j1.close()
+    j2 = RequestJournal(jpath, resume=True)
+    j2.event("retire", uid=0, slot=0, reason="budget", n_out=1, out=[5])
+    j2.close()
+    records = load_journal(jpath)
+    assert validate_events(records) == []
+    with open(jpath) as f:
+        headers = [ln for ln in f if '"header"' in ln]
+    assert len(headers) == 1
+    submitted, retired = replay_journal(records)
+    assert list(submitted) == [0] and retired[0]["out"] == [5]
+    # resume=False (a genuinely new run) truncates
+    j3 = RequestJournal(jpath, resume=False)
+    j3.close()
+    assert replay_journal(load_journal(jpath)) == ({}, {})
+
+
+# ============================================================== integrity
+def test_checksum_primitives():
+    a = np.arange(12, dtype=np.int8).reshape(3, 4)
+    cs = checksum_arrays({"x": a})
+    assert cs["x"].startswith("crc32:")
+    verify_checksums({"x": a.copy()}, cs)
+    # same bytes, different shape/dtype must NOT collide
+    assert array_checksum(a) != array_checksum(a.reshape(4, 3))
+    assert array_checksum(a) != array_checksum(a.view(np.uint8))
+    b = a.copy()
+    b[1, 2] ^= 1
+    with pytest.raises(IntegrityError) as ei:
+        verify_checksums({"x": b}, cs)
+    assert ei.value.reason == "checksum"
+    with pytest.raises(IntegrityError) as ei:
+        verify_checksums({}, cs)
+    assert ei.value.reason == "missing_array"
+
+
+def test_invariant_validators():
+    with pytest.raises(IntegrityError) as ei:
+        check_finite("s", np.array([1.0, np.nan]))
+    assert ei.value.reason == "nonfinite"
+    with pytest.raises(IntegrityError) as ei:
+        check_positive("s", np.array([0.5, 0.0]))
+    assert ei.value.reason == "nonpositive_scale"
+    check_code_range("q", np.array([-128, 127], np.int16), 8)
+    with pytest.raises(IntegrityError) as ei:
+        check_code_range("q", np.array([-3, 4], np.int16), 3)
+    assert ei.value.reason == "code_range"
+    # kv_pos must be -1 or its own index
+    pos = np.full((1, 2, 4), -1, np.int32)
+    pos[0, 0, :2] = [0, 1]
+    validate_cache_arrays({"cache/kv_pos": pos}, "fp")
+    pos[0, 1, 3] = 1
+    with pytest.raises(IntegrityError) as ei:
+        validate_cache_arrays({"cache/kv_pos": pos}, "fp")
+    assert ei.value.reason == "kv_pos_invalid"
+
+
+def _tamper_npz(path, key, mutate):
+    """Load an npz, apply `mutate` to arrays[key], rewrite in place."""
+    data = dict(np.load(path))
+    data[key] = mutate(data[key])
+    np.savez(path, **data)
+
+
+def _retamper_manifest_checksums(snap_dir):
+    """Recompute manifest checksums after a tamper — for testing the
+    SEMANTIC invariants behind a checksum that 'passes'."""
+    with np.load(os.path.join(snap_dir, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    mpath = os.path.join(snap_dir, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["checksums"] = checksum_arrays(arrays)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+@pytest.fixture()
+def snapshotted(setup, tmp_path):
+    """An int8 engine mid-run with a written snapshot (shared by the
+    corruption tests; function-scoped — each test tampers its own copy)."""
+    cfg, model, params, prompts = setup
+    eng = Engine(cfg, params, mk_ecfg(kv_mode="int8"))
+    submit_all(eng, prompts)
+    for _ in range(3):
+        eng.step()
+    spath = str(tmp_path / "snap")
+    eng.snapshot(spath)
+    return cfg, params, eng, spath
+
+
+def test_snapshot_flipped_byte_rejected(snapshotted):
+    cfg, params, eng, spath = snapshotted
+    npz = os.path.join(spath, "arrays.npz")
+    _tamper_npz(npz, "cache/k", lambda a: a ^ np.int8(1))
+    with pytest.raises(IntegrityError) as ei:
+        read_snapshot(spath)
+    assert ei.value.reason == "checksum"
+
+
+def test_snapshot_semantic_invariants_rejected(snapshotted):
+    """Even with a 'valid' checksum (recomputed post-tamper), broken
+    cache invariants — out-of-place kv_pos, nonpositive scale — fail."""
+    cfg, params, eng, spath = snapshotted
+
+    def bad_pos(a):
+        a = a.copy()
+        a[0, 0, -1] = 1          # occupied claim at the wrong index
+        return a
+    _tamper_npz(os.path.join(spath, "arrays.npz"), "cache/kv_pos",
+                bad_pos)
+    _retamper_manifest_checksums(spath)
+    with pytest.raises(IntegrityError) as ei:
+        read_snapshot(spath)
+    assert ei.value.reason == "kv_pos_invalid"
+
+
+def test_snapshot_nonpositive_scale_rejected(snapshotted):
+    cfg, params, eng, spath = snapshotted
+
+    def bad_scale(a):
+        a = a.copy()
+        a.reshape(-1)[0] = 0.0
+        return a
+    _tamper_npz(os.path.join(spath, "arrays.npz"), "cache/k_scale",
+                bad_scale)
+    _retamper_manifest_checksums(spath)
+    with pytest.raises(IntegrityError) as ei:
+        read_snapshot(spath)
+    assert ei.value.reason == "nonpositive_scale"
+
+
+def test_snapshot_schema_and_geometry_mismatch(snapshotted):
+    cfg, params, eng, spath = snapshotted
+    # wrong engine geometry: loud config_mismatch, names the diff
+    other = Engine(cfg, params, mk_ecfg(n_slots=2, kv_mode="int8"))
+    with pytest.raises(IntegrityError) as ei:
+        other.restore(spath)
+    assert ei.value.reason == "config_mismatch"
+    # wrong kv mode too (fingerprint covers cache.mode)
+    fp_eng = Engine(cfg, params, mk_ecfg(kv_mode="fp"))
+    with pytest.raises(IntegrityError) as ei:
+        fp_eng.restore(spath)
+    assert ei.value.reason == "config_mismatch"
+    # schema bump: refused before any array is touched
+    mpath = os.path.join(spath, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["schema"] = 99
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(IntegrityError) as ei:
+        read_snapshot(spath)
+    assert ei.value.reason == "schema"
+    with pytest.raises(IntegrityError) as ei:
+        read_snapshot(str(spath) + "_nonexistent")
+    assert ei.value.reason == "schema"
+
+
+def test_ckpt_checksums_roundtrip_and_corruption(setup, tmp_path):
+    """checkpoint/ckpt.py shares the validator: a saved quantized tree
+    restores clean, a flipped byte raises, and a corrupt quantized code
+    range raises even when checksums are recomputed."""
+    from repro.checkpoint import ckpt
+    from repro.core import QuantConfig, QuantPolicy, quantize_tree
+    cfg, model, params, prompts = setup
+    qtree, _ = quantize_tree(KEY, params,
+                             QuantPolicy(cfg=QuantConfig(bits=2)))
+    cdir = str(tmp_path / "ckpt")
+    ckpt.save(cdir, 0, qtree)
+    restored, step = ckpt.restore(cdir, params)
+    assert step == 0
+    npz = os.path.join(cdir, "step_00000000", "arrays.npz")
+    data = dict(np.load(npz))
+    qkey = next(k for k in data if k.endswith(".q"))
+    data[qkey] = data[qkey] ^ np.int8(1)
+    np.savez(npz, **data)
+    with pytest.raises(IntegrityError) as ei:
+        ckpt.restore(cdir, params)
+    assert ei.value.reason == "checksum"
+    # re-stamp checksums: the INT2 code range check still trips
+    mpath = os.path.join(cdir, "step_00000000", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    data[qkey] = np.full_like(data[qkey], 100)
+    np.savez(npz, **data)
+    manifest["checksums"] = checksum_arrays(data)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(IntegrityError) as ei:
+        ckpt.restore(cdir, params)
+    assert ei.value.reason == "code_range"
+
+
+def test_recipe_validation(setup, kv_scales, tmp_path):
+    """QuantRecipe.load shares the validator: checksummed round-trip,
+    corrupt scales rejected, nonpositive KV scale rejected even when
+    the checksum 'passes' (recorded over the bad array at save)."""
+    from repro.calib import QuantRecipe
+    cfg, model, params, prompts = setup
+    rdir = str(tmp_path / "rec")
+    QuantRecipe(name="r", arch=cfg.name, kv_scales=kv_scales,
+                kv_qchunks=4).save(rdir)
+    rec = QuantRecipe.load(rdir)
+    np.testing.assert_array_equal(rec.kv_scales["k_scale"],
+                                  np.asarray(kv_scales["k_scale"],
+                                             np.float32))
+    _tamper_npz(os.path.join(rdir, "scales.npz"), "kv/k_scale",
+                lambda a: a + 1.0)
+    with pytest.raises(IntegrityError) as ei:
+        QuantRecipe.load(rdir)
+    assert ei.value.reason == "checksum"
+    bad = {k: np.asarray(v).copy() for k, v in kv_scales.items()}
+    bad["v_scale"].reshape(-1)[0] = -1.0
+    rdir2 = str(tmp_path / "rec2")
+    QuantRecipe(name="r", arch=cfg.name, kv_scales=bad,
+                kv_qchunks=4).save(rdir2)
+    with pytest.raises(IntegrityError) as ei:
+        QuantRecipe.load(rdir2)
+    assert ei.value.reason == "nonpositive_scale"
+
+
+# ================================================== snapshot round-trip
+def _assert_engine_state_equal(x, y):
+    for name in CACHE_DATA_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(x.cache, name)),
+            np.asarray(getattr(y.cache, name)), err_msg=name)
+    np.testing.assert_array_equal(x._last_tok, y._last_tok)
+    np.testing.assert_array_equal(x._pos, y._pos)
+    np.testing.assert_array_equal(x._prefill_prog, y._prefill_prog)
+    assert [r and r.uid for r in x.sched.slots] \
+        == [r and r.uid for r in y.sched.slots]
+    assert [r.uid for r in x.sched.queue] \
+        == [r.uid for r in y.sched.queue]
+
+
+def _roundtrip_check(setup, scales, kv_mode, spath, n_steps):
+    """Snapshot at step `n_steps` (random occupancy, slots mid-prefill,
+    possibly some requests already retired), restore into a FRESH
+    engine: (a) every cache array + host decode state bit-identical,
+    (b) one further engine step stays bit-identical on both sides."""
+    cfg, model, params, prompts = setup
+    a = Engine(cfg, params, mk_ecfg(kv_mode=kv_mode), kv_scales=scales)
+    submit_all(a, prompts)
+    for _ in range(n_steps):
+        if a.sched.idle:
+            break
+        a.step()
+    a.snapshot(spath)
+    b = Engine(cfg, params, mk_ecfg(kv_mode=kv_mode), kv_scales=scales)
+    b.restore(spath)
+    _assert_engine_state_equal(a, b)
+    if not a.sched.idle:
+        # pre-snapshot retires are journal state, not snapshot state —
+        # only the finishes PRODUCED by the next step must agree
+        na, nb = len(a.sched.finished), len(b.sched.finished)
+        a.step()
+        b.step()
+        _assert_engine_state_equal(a, b)
+        assert [(r.uid, r.out) for r in a.sched.finished[na:]] \
+            == [(r.uid, r.out) for r in b.sched.finished[nb:]]
+
+
+@pytest.mark.parametrize("kv_mode,static", KV_MODES,
+                         ids=["fp", "int8", "int8-static"])
+@pytest.mark.parametrize("n_steps", [0, 2, 6])
+def test_snapshot_restore_roundtrip(setup, kv_scales, tmp_path,
+                                    kv_mode, static, n_steps):
+    """Deterministic spine of the round-trip property: step counts that
+    land mid-prefill (0, 2) and mid-decode-with-retires (6), across all
+    three KV cache configurations. Runs everywhere; the hypothesis
+    variant below widens the step-count coverage when available."""
+    _roundtrip_check(setup, kv_scales if static else None, kv_mode,
+                     str(tmp_path / "snap"), n_steps)
+
+
+@pytest.mark.parametrize("kv_mode,static", KV_MODES,
+                         ids=["fp", "int8", "int8-static"])
+def test_snapshot_restore_roundtrip_property(setup, kv_scales, tmp_path,
+                                             kv_mode, static):
+    """Hypothesis widening of the round-trip property: random snapshot
+    step (random occupancy / mid-prefill slots / retired mixes)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    scales = kv_scales if static else None
+    counter = [0]
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 9))
+    def prop(n_steps):
+        counter[0] += 1
+        _roundtrip_check(setup, scales, kv_mode,
+                         str(tmp_path / f"snap_{counter[0]}"), n_steps)
+    prop()
+
+
+# ================================================ end-to-end crash chaos
+def test_crash_fault_spec_parse():
+    s = FaultSpec.parse("crash=0.25,crash_kill=1,seed=2,max=1")
+    assert s.crash_rate == 0.25 and s.crash_kill is True
+    assert s.seed == 2 and s.max_faults == 1
+    s2 = FaultSpec.parse("crash=0.1")
+    assert s2.crash_kill is False
+
+
+def test_crash_draw_preserves_other_streams(setup):
+    """crash_rate=0 must consume NO rng draws: adding the crash fault
+    class cannot perturb the seeded streams of existing chaos specs."""
+    from repro.engine import FaultInjector
+    a = FaultInjector(FaultSpec(seed=5, step_exception_rate=0.3,
+                                max_faults=100))
+    b = FaultInjector(FaultSpec(seed=5, step_exception_rate=0.3,
+                                max_faults=100, crash_rate=0.0))
+    draws_a = [a.draw_step() for _ in range(20)]
+    draws_b = []
+    for _ in range(20):
+        assert b.draw_crash() is False      # rate 0: no rng consumed
+        draws_b.append(b.draw_step())
+    assert draws_a == draws_b
+
+
+@pytest.mark.parametrize("kv_mode,static", KV_MODES,
+                         ids=["fp", "int8", "int8-static"])
+def test_crash_recovery_token_identity(setup, kv_scales, tmp_path,
+                                       kv_mode, static):
+    """THE acceptance property: seeded crash at a step boundary, fresh-
+    process recovery from snapshot + journal, and every surviving
+    request completes token-identical to an uncrashed reference —
+    exactly-once retirement, no slot-pool leak, journal still a valid
+    trace, recovery counters exported."""
+    cfg, model, params, prompts = setup
+    scales = kv_scales if static else None
+    jpath = str(tmp_path / "journal.jsonl")
+    spath = str(tmp_path / "snap")
+
+    ref = Engine(cfg, params, mk_ecfg(kv_mode=kv_mode), kv_scales=scales)
+    submit_all(ref, prompts)
+    ref_out = {r.uid: list(r.out) for r in ref.drain()}
+
+    crashed_cfg = mk_ecfg(kv_mode=kv_mode, journal_path=jpath,
+                          snapshot_path=spath, snapshot_every=3,
+                          fault_spec=FaultSpec(seed=2, crash_rate=0.25,
+                                               max_faults=1))
+    eng = Engine(cfg, params, crashed_cfg, kv_scales=scales)
+    submit_all(eng, prompts)
+    with pytest.raises(InjectedCrash):
+        eng.drain()
+    # the crash fired at a step boundary AFTER the journal sync: the
+    # journal's durable horizon covers everything the engine did
+    del eng
+
+    eng2 = Engine(cfg, params, mk_ecfg(kv_mode=kv_mode,
+                                       journal_path=jpath,
+                                       journal_resume=True,
+                                       snapshot_path=spath),
+                  kv_scales=scales)
+    info = eng2.recover(spath, jpath)
+    fin2 = {r.uid: list(r.out) for r in eng2.drain()}
+
+    # exactly-once: journal-retired uids and post-recovery finishes
+    # partition the workload
+    done = {uid: rec["out"] for uid, rec in info["retired"].items()}
+    for uid, out in fin2.items():
+        assert uid not in done, f"uid {uid} retired twice"
+        done[uid] = out
+    assert sorted(done) == list(range(len(prompts)))
+    assert occupied_slots(eng2.cache) == []
+    assert not any(eng2.sched.slots) and not eng2.sched.queue
+
+    # zero token divergence for every survivor (and pre-crash retires)
+    for uid, out in ref_out.items():
+        assert done[uid] == out, f"uid {uid} diverged after recovery"
+
+    # merged crash+recovery journal stays a valid trace
+    records = load_journal(jpath)
+    assert validate_events(records) == []
+    names = {r.get("name") for r in records if r.get("kind") == "event"}
+    assert {"snapshot", "restore"} <= names
+
+    # recovery counters on the exported scrape surface
+    prom = eng2.registry.to_prometheus()
+    for name in ("repro_engine_snapshots_total",
+                 "repro_engine_restore_total",
+                 "repro_engine_journal_replayed_requests_total",
+                 "repro_engine_restore_duration_s_bucket"):
+        assert name in prom, name
+    snap = eng2.registry.snapshot()
+    assert snap["engine_restore"] == 1
+    assert snap["engine_journal_replayed_requests"] \
+        == info["n_restored"] + info["n_requeued"]
+
+
+def test_journal_only_recovery(setup, tmp_path):
+    """No snapshot at all (crash before the first one): every un-retired
+    request re-prefills from its journal submit record and still matches
+    the reference bit-for-bit."""
+    cfg, model, params, prompts = setup
+    jpath = str(tmp_path / "journal.jsonl")
+    ref = Engine(cfg, params, mk_ecfg())
+    submit_all(ref, prompts)
+    ref_out = {r.uid: list(r.out) for r in ref.drain()}
+
+    eng = Engine(cfg, params, mk_ecfg(journal_path=jpath))
+    submit_all(eng, prompts)
+    for _ in range(4):
+        eng.step()
+    pre_retired = {r.uid: list(r.out) for r in eng.sched.finished}
+    del eng                                 # "crash" with no snapshot
+
+    eng2 = Engine(cfg, params, mk_ecfg(journal_path=jpath,
+                                       journal_resume=True))
+    info = eng2.recover(None, jpath)
+    assert info["manifest"] is None
+    assert info["n_restored"] == 0
+    assert info["n_requeued"] == len(prompts) - len(pre_retired)
+    assert {int(u) for u in info["retired"]} == set(pre_retired)
+    fin2 = {r.uid: list(r.out) for r in eng2.drain()}
+    done = {uid: rec["out"] for uid, rec in info["retired"].items()}
+    done.update(fin2)
+    assert done == {uid: out for uid, out in ref_out.items()}
+
+
+def test_restore_duration_histogram_buckets():
+    from repro.obs.metrics import RESTORE_BUCKETS_S
+    assert list(RESTORE_BUCKETS_S) == sorted(RESTORE_BUCKETS_S)
+    assert RESTORE_BUCKETS_S[0] <= 1e-3 and RESTORE_BUCKETS_S[-1] >= 60
