@@ -80,6 +80,11 @@ GATES = [
          "floor", floor=1.0),
     Gate("BENCH_serve.json",
          "open_loop.overload.shed_on.goodput_tokens_per_s", "higher"),
+    # flight recorder (DESIGN.md §14): always-on like the metrics
+    # registry, so the flight-on throughput tracks noise-aware and the
+    # measured overhead must stay under serve_bench's own in-run bound
+    Gate("BENCH_serve.json", "flight_recorder.flight_on_tokens_per_s",
+         "higher"),
     # calibration: static-scale decode win + first-token faithfulness
     Gate("BENCH_calib.json", "static_kv_decode.static_speedup",
          "higher"),

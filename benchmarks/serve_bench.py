@@ -504,6 +504,36 @@ def main():
         f"both the 1% budget and 3x the {noise_frac:.2%} noise floor; "
         f"something landed on the hot path outside the `if mx:` guards")
 
+    # ---- flight recorder overhead: like the registry, the flight ring
+    # (obs/flight.py) is ALWAYS ON — one per-step record dict + deque
+    # append — so it gets the identical interleaved on/off treatment and
+    # the identical <= max(1%, 3x noise) bound. The on side is the
+    # default config (flight enabled); off is EngineConfig(flight=False).
+    ecfg8f_fr_off = EngineConfig(**{**ecfg8f.__dict__, "flight": False})
+    run_engine(cfg, params, warm, ecfg8f_fr_off)
+    f_on = f_off = None
+    for _ in range(max(args.repeats, 3)):
+        _, fo = run_engine(cfg, params, workload, ecfg8f)
+        _, ff = run_engine(cfg, params, workload, ecfg8f_fr_off)
+        if f_on is None or fo["tokens_per_s"] > f_on["tokens_per_s"]:
+            f_on = fo
+        if f_off is None or ff["tokens_per_s"] > f_off["tokens_per_s"]:
+            f_off = ff
+    fr_on_tps, fr_off_tps = f_on["tokens_per_s"], f_off["tokens_per_s"]
+    fr_overhead_frac = 1.0 - fr_on_tps / fr_off_tps
+    fr_bound = max(0.01, 3.0 * noise_frac)
+    flight_recorder = {
+        "flight_on_tokens_per_s": fr_on_tps,
+        "flight_off_tokens_per_s": fr_off_tps,
+        "overhead_frac": fr_overhead_frac,
+        "bound_frac": fr_bound,
+    }
+    assert fr_overhead_frac <= fr_bound, (
+        f"always-on flight recorder costs {fr_overhead_frac:.2%} of "
+        f"decode throughput ({fr_on_tps:.1f} vs {fr_off_tps:.1f} tok/s) "
+        f"— above both the 1% budget and 3x the {noise_frac:.2%} noise "
+        f"floor; the per-step record grew beyond one dict + ring append")
+
     # ---- open-loop SLO sweep: offered load is the independent variable;
     # each point replays a seeded Poisson+burst schedule against the
     # default serving config and judges every request against its class
@@ -693,6 +723,7 @@ def main():
         "greedy_agreement_fused_vs_materialized": agree_fused,
         "trace": trace,
         "metrics_overhead": metrics_overhead,
+        "flight_recorder": flight_recorder,
         "soak": soak,
         "open_loop": open_loop,
         "recovery": recovery,
@@ -748,6 +779,9 @@ def main():
     print(f"metrics : on {on_tps:.1f} / off {off_tps:.1f} tok/s "
           f"(overhead {mx_overhead_frac:.2%} <= bound "
           f"{metrics_overhead['bound_frac']:.2%})")
+    print(f"flight  : on {fr_on_tps:.1f} / off {fr_off_tps:.1f} tok/s "
+          f"(overhead {fr_overhead_frac:.2%} <= bound "
+          f"{flight_recorder['bound_frac']:.2%})")
     if open_loop:
         k = open_loop["knee"]
         if k is None:

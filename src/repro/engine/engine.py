@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import sys
 import time
 from typing import Optional
@@ -288,6 +289,23 @@ class EngineConfig:
                                         # the end-of-step boundary (after
                                         # the journal fsync, so snapshot
                                         # state ⊆ journal horizon)
+    # --- flight recorder + incident capture (obs/flight.py, §14) --------
+    flight: bool = True                 # always-on bounded ring of coarse
+                                        # per-step records (the black
+                                        # box); overhead gated <= max(1%,
+                                        # noise) by serve_bench like the
+                                        # metrics registry
+    flight_capacity: int = 512          # ring size in steps
+    incident_dir: Optional[str] = None  # arm the anomaly-detector sweep
+                                        # and write incident bundles
+                                        # under this directory (atomic
+                                        # tmp+fsync+rename). None = sweep
+                                        # off, recorder still on
+    incident_cooldown: int = 50         # steps: per-detector refire
+                                        # cooldown AND global min gap
+                                        # between bundles — a fault storm
+                                        # produces one bundle, not one
+                                        # per step
 
 
 class Engine:
@@ -468,6 +486,29 @@ class Engine:
             self._ladder = DegradationLadder(
                 ecfg.degrade_thresholds or (N_, 2 * N_, 4 * N_),
                 patience=ecfg.degrade_patience)
+        # --- flight recorder + incident capture (obs/flight.py, §14) ----
+        # the recorder is the black box: always on (like the registry)
+        # unless explicitly disabled; the detector sweep only runs when
+        # an incident_dir is armed, so a plain run pays one ring append
+        self._flight = None
+        if ecfg.flight:
+            from ..obs.flight import FlightRecorder
+            self._flight = FlightRecorder(
+                capacity=ecfg.flight_capacity, clock=clock,
+                meta={"arch": cfg.name, "n_slots": ecfg.n_slots,
+                      "kv_mode": ecfg.kv_mode, "spec_k": ecfg.spec_k})
+        self._detect = None
+        if ecfg.incident_dir:
+            from ..obs.detect import AnomalyDetector
+            self._detect = AnomalyDetector(
+                cooldown_steps=ecfg.incident_cooldown,
+                queue_set_point=(ecfg.max_queue or None))
+        self.incidents: list = []        # bundle paths written this run
+        self._last_bundle_step = None
+        # latest sampled KV quality signals (fed by the periodic
+        # kv_quality_counters pull; None until the first sample)
+        self._last_clip_frac = None
+        self._last_span_frac = None
         self.cache = init_slot_cache(
             cfg, ecfg.n_slots, ecfg.max_len, mode=ecfg.kv_mode,
             dtype=dtype_of(ecfg.kv_dtype), qchunks=ecfg.kv_qchunks,
@@ -510,6 +551,7 @@ class Engine:
         self._any_deadlines = False      # skip the per-step sweep until
                                          # a submit carries a deadline
         self.n_step_retries = 0
+        self.n_quarantined = 0
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_prefill_chunks = 0
@@ -1015,6 +1057,13 @@ class Engine:
                 self.n_step_retries += 1
                 if self._mx:
                     self._mx["retries"].inc()
+                if self._detect is not None:
+                    # attributable failures carry the victim slots — name
+                    # the first victim's uid in the incident trigger
+                    uid = (self.sched.slots[e.slots[0]].uid
+                           if e.slots and self.sched.slots[e.slots[0]]
+                           is not None else None)
+                    self._detect.note("step_retry", reason=str(e), uid=uid)
                 # undo any K/V the failed dispatch wrote: every active
                 # slot back to its pre-step position (host _pos has not
                 # advanced, so re-execution is bit-identical)
@@ -1029,6 +1078,14 @@ class Engine:
                                   f"{self.sched.slots[s].uid}): corrupt "
                                   f"decode output {self._fail_streak[s]} "
                                   f"attempts running", file=sys.stderr)
+                            self.n_quarantined += 1
+                            if self._detect is not None:
+                                self._detect.note(
+                                    "quarantine",
+                                    uid=self.sched.slots[s].uid,
+                                    reason=f"slot {s}: corrupt output "
+                                           f"{int(self._fail_streak[s])} "
+                                           f"attempts running")
                             self._retire(s, "failed")
                             self._fail_streak[s] = 0
                             active = [a for a in active if a != s]
@@ -1038,6 +1095,13 @@ class Engine:
                           f"whole batch: {e}", file=sys.stderr)
                     for s in list(active):
                         self._fail_streak[s] = 0
+                        self.n_quarantined += 1
+                        if self._detect is not None:
+                            self._detect.note(
+                                "quarantine",
+                                uid=self.sched.slots[s].uid,
+                                reason=f"slot {s}: whole-batch failure "
+                                       f"after {attempt} attempts")
                         self._retire(s, "failed")
                     active = []
                 if active and self.ecfg.retry_backoff_s > 0:
@@ -1080,6 +1144,10 @@ class Engine:
         # waiting on anything; counting it would inflate the one-shot
         # stall baseline with the idle-engine admission burst)
         n_decoding_before = len(self.sched.active_slots())
+        # dispatch-wall ring lengths at step start: whichever ring grew
+        # this step holds the step's decode/verify dispatch wall (the
+        # coarse dispatch split in the flight record)
+        n_dec0, n_spec0 = len(self.decode_step_s), len(self.spec_step_s)
         if self._any_deadlines:
             self._enforce_deadlines()
         # --- degradation ladder (faults.DegradationLadder, §12) --------
@@ -1206,10 +1274,25 @@ class Engine:
                 # has its own period and defaults off
                 from .kvcache import kv_quality_counters
                 kc = kv_quality_counters(self.cache)
+                clips = []
                 for side in ("k", "v"):
                     if kc.get(f"{side}_clip_frac") is not None:
                         mx[f"kv_{side}_clip"].set(kc[f"{side}_clip_frac"])
                         mx[f"kv_{side}_occ"].set(kc[f"{side}_occupancy"])
+                        clips.append(kc[f"{side}_clip_frac"])
+                # stash the worse-side samples for the flight record /
+                # kv_clip_spike detector (same pull, no extra transfer)
+                if clips:
+                    self._last_clip_frac = max(clips)
+                spans = []
+                for side in ("k", "v"):
+                    hist = kc.get(f"{side}_span_outlier_hist")
+                    if hist and sum(hist) > 0:
+                        # buckets at > 4x the median chunk span — the
+                        # OCS outlier tail (quality.OUTLIER_LOG2_EDGES)
+                        spans.append(sum(hist[5:]) / sum(hist))
+                if spans:
+                    self._last_span_frac = max(spans)
         if tr:
             tr.span_end("step", t_step0,
                         prefill_tokens=prefill_tokens,
@@ -1222,7 +1305,126 @@ class Engine:
         if self.ecfg.snapshot_every and self.ecfg.snapshot_path \
                 and len(self.step_s) % self.ecfg.snapshot_every == 0:
             self.snapshot()
+        # --- flight record + anomaly sweep (obs/flight.py, §14) ---------
+        # after the journal fsync so a bundle's journal tail includes
+        # this step; the record is one small dict + ring append — the
+        # always-on cost the flight_recorder overhead bound covers
+        fr, det = self._flight, self._detect
+        if fr is not None or det is not None:
+            uids = self.sched.occupied_uids()
+            rec = {
+                "step": len(self.step_s) - 1,
+                "step_s": round(self.step_s[-1], 6),
+                "decode_s": round(
+                    self.decode_step_s[-1]
+                    if len(self.decode_step_s) > n_dec0 else
+                    (self.spec_step_s[-1]
+                     if len(self.spec_step_s) > n_spec0 else 0.0), 6),
+                "draft_s": round(self._spec.last_draft_s, 6)
+                if self._spec is not None and self._rung < 1 else 0.0,
+                "queue": len(self.sched.queue),
+                "backlog": self._prefill_backlog(),
+                "occupied": len(uids),
+                "decoding": n_decoding_before,
+                "rung": self._rung,
+                "retries": self.n_step_retries,
+                "quarantined": self.n_quarantined,
+                "accept": (round(self.sched.accept_ewma, 4)
+                           if self._spec is not None
+                           and self.sched.accept_ewma is not None
+                           else None),
+                "spec_off": bool(self._spec is not None
+                                 and self._rung >= 1),
+                "clip_frac": self._last_clip_frac,
+                "span_frac": self._last_span_frac,
+                "uids": uids,
+            }
+            if fr is not None:
+                rec = fr.record(**rec)
+            if det is not None:
+                firings = det.sweep(rec)
+                if firings:
+                    self._capture_incident(firings)
         return self.sched.finished[n_done_before:]
+
+    # -------------------------------------------- incident capture (§14) --
+    def _capture_incident(self, firings, force: bool = False):
+        """Write one incident bundle for a batch of detector firings —
+        the first firing is the named trigger. A global cooldown
+        (ecfg.incident_cooldown steps) gates bundles so a fault storm
+        yields one incident, not one per step; ``force`` bypasses it
+        (explicit dumps: supervisor restart, IntegrityError)."""
+        if not self.ecfg.incident_dir or not firings:
+            return None
+        step = len(self.step_s)
+        if not force and self._last_bundle_step is not None \
+                and step - self._last_bundle_step \
+                < self.ecfg.incident_cooldown:
+            return None
+        from ..obs.flight import tail_lines, write_incident_bundle
+        from ..obs.provenance import provenance
+        from .recovery import _engine_fingerprint, _req_doc
+        trigger = firings[0]
+        docs: dict = {
+            "trigger.json": {
+                "schema": 1, "step": step,
+                "trigger": trigger.to_dict(),
+                "firings": [f.to_dict() for f in firings],
+                "faults_injected": (self._faults.counts()
+                                    if self._faults is not None else None),
+            },
+            "flight.json": {
+                "header": (self._flight.header()
+                           if self._flight is not None else None),
+                "records": (self._flight.window()
+                            if self._flight is not None else []),
+            },
+            "metrics.json": (self.registry.snapshot()
+                             if self.registry is not None else None),
+            "fingerprint.json": _engine_fingerprint(self),
+            "provenance.json": provenance(),
+            "requests.json": {
+                "active": [dict(_req_doc(r), slot=s)
+                           for s, r in enumerate(self.sched.slots)
+                           if r is not None],
+                "queued": [_req_doc(r) for r in self.sched.queue],
+                "poison_uids": (sorted(self._faults.poison_uids)
+                                if self._faults is not None else []),
+            },
+        }
+        if self.ecfg.journal_path:
+            if self.journal is not None:
+                self.journal.sync()
+            docs["journal_tail.jsonl"] = tail_lines(
+                self.ecfg.journal_path, 200)
+        # sequence from what's on disk, not this object's counter: a
+        # supervised restart replaces the engine but bundles persist,
+        # and an overwritten bundle would silently eat an incident
+        try:
+            seq = len([d for d in os.listdir(self.ecfg.incident_dir)
+                       if d.startswith("incident-")
+                       and not d.endswith(".tmp")])
+        except OSError:
+            seq = 0
+        name = f"incident-{seq:03d}-{trigger.detector}"
+        path = write_incident_bundle(self.ecfg.incident_dir, name, docs)
+        self.incidents.append(path)
+        self._last_bundle_step = step
+        print(f"[engine] incident bundle: {path} "
+              f"(trigger {trigger.detector}: {trigger.reason})",
+              file=sys.stderr)
+        return path
+
+    def dump_incident(self, detector: str, reason: str = "",
+                      uid: Optional[int] = None):
+        """Explicitly capture an incident bundle (bypasses the cooldown).
+        Used by the serve supervisor after an ``InjectedCrash`` restart
+        and by the restore path on ``IntegrityError`` — anomalies that
+        happen outside the step loop, where no sweep will run."""
+        from ..obs.detect import Firing
+        return self._capture_incident(
+            [Firing(detector, len(self.step_s), reason, uid=uid)],
+            force=True)
 
     # ------------------------------------------------- crash safety ------
     def snapshot(self, path: Optional[str] = None) -> str:
@@ -1246,9 +1448,14 @@ class Engine:
         constructed, idle) engine. Integrity-validated: checksums, code
         ranges, kv_pos invariants — raises ``IntegrityError`` rather
         than serve a corrupt artifact. Returns the snapshot manifest."""
-        from .recovery import restore_engine
+        from .recovery import IntegrityError, restore_engine
         t0 = self.clock()
-        manifest = restore_engine(self, path)
+        try:
+            manifest = restore_engine(self, path)
+        except IntegrityError as e:
+            # capture the rejected artifact's context before failing loud
+            self.dump_incident("integrity_error", reason=str(e))
+            raise
         if self._mx:
             self._mx["restores"].inc()
             self._mx["restore_s"].observe(self.clock() - t0)
@@ -1261,14 +1468,18 @@ class Engine:
         evict anything the journal proves already retired. Either source
         may be absent (journal-only recovery re-prefills everything).
         Returns recovery.recover_engine's summary dict."""
-        from .recovery import recover_engine
+        from .recovery import IntegrityError, recover_engine
         t0 = self.clock()
-        info = recover_engine(
-            self,
-            snapshot_path if snapshot_path is not None
-            else self.ecfg.snapshot_path,
-            journal_path if journal_path is not None
-            else self.ecfg.journal_path)
+        try:
+            info = recover_engine(
+                self,
+                snapshot_path if snapshot_path is not None
+                else self.ecfg.snapshot_path,
+                journal_path if journal_path is not None
+                else self.ecfg.journal_path)
+        except IntegrityError as e:
+            self.dump_incident("integrity_error", reason=str(e))
+            raise
         if self._mx:
             if info["manifest"] is not None:
                 self._mx["restores"].inc()
@@ -1448,9 +1659,16 @@ class Engine:
             "requests_shed": self.sched.n_shed,
             "requests_cancelled": self.sched.n_cancelled,
             "step_retries": self.n_step_retries,
+            "quarantined": self.n_quarantined,
             "degradation_rung": self._rung,
             "degradation_transitions": (self._ladder.n_transitions
                                         if self._ladder else 0),
+            # flight recorder + incident capture (§14)
+            "flight_recorded": (self._flight.n_recorded
+                                if self._flight is not None else 0),
+            "incidents": list(self.incidents),
+            "anomalies_fired": (self._detect.n_fired
+                                if self._detect is not None else 0),
             **spec,
         }
         if self._faults is not None:

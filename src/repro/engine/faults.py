@@ -148,6 +148,7 @@ class FaultInjector:
         self.spec = spec
         self.rng = np.random.default_rng(spec.seed)
         self.poison_uids: set[int] = set()
+        self.last_corrupted_uids: list[int] = []
         self.n_step_exceptions = 0
         self.n_token_corruptions = 0
         self.n_slow_steps = 0
@@ -216,17 +217,26 @@ class FaultInjector:
                        uid_of: dict) -> np.ndarray:
         """Apply token-level corruption to one decode attempt's sampled
         tokens: a transient NaN-logits victim (random decoding slot) plus
-        every slot currently holding a poisoned request."""
+        every slot currently holding a poisoned request.
+
+        ``last_corrupted_uids`` records this attempt's victims — the
+        ground truth an incident bundle's trigger attribution is checked
+        against in tests (the engine independently attributes via the
+        out-of-vocab slots on the StepFailure)."""
         toks = np.array(toks, copy=True)
+        self.last_corrupted_uids = []
         if self.spec.nan_logits_rate > 0 and active \
                 and self._budget_left() \
                 and self.rng.uniform() < self.spec.nan_logits_rate:
             victim = active[int(self.rng.integers(len(active)))]
             toks[victim] = POISON_TOKEN
             self.n_token_corruptions += 1
+            self.last_corrupted_uids.append(uid_of[victim])
         for s in active:
             if uid_of[s] in self.poison_uids:
                 toks[s] = POISON_TOKEN
+                if uid_of[s] not in self.last_corrupted_uids:
+                    self.last_corrupted_uids.append(uid_of[s])
         return toks
 
     def counts(self) -> dict:

@@ -43,7 +43,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import shutil
 import time
 import zlib
 from collections import deque
@@ -391,8 +390,8 @@ def snapshot_engine(eng, path: str) -> str:
 
     Layout mirrors ``checkpoint/ckpt.py``: a tmp directory holding
     ``arrays.npz`` + ``manifest.json`` (fsync'd) is ``os.rename``d over
-    ``path`` — a crash mid-write leaves either the old snapshot or none,
-    never a torn one.  The manifest carries per-array checksums, the
+    ``path`` via the shared ``obs.atomic.atomic_dir`` protocol — a crash
+    mid-write leaves either the old snapshot or none, never a torn one.  The manifest carries per-array checksums, the
     provenance header and an engine-geometry fingerprint that restore
     validates before touching any array.
     """
@@ -429,19 +428,15 @@ def snapshot_engine(eng, path: str) -> str:
         "prefilling": list(sched._prefilling),
     }
 
+    from ..obs.atomic import atomic_dir
+
     final = os.path.abspath(path)
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    with atomic_dir(final) as tmp:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
     return final
 
 

@@ -237,6 +237,12 @@ class Scheduler:
         return [i for i, r in enumerate(self.slots)
                 if r is not None and i not in self._prefilling]
 
+    def occupied_uids(self) -> list[int]:
+        """uids holding a slot right now, in slot order — the per-step
+        active set the flight recorder stamps on every record (and the
+        attribution set an incident bundle's request docs cover)."""
+        return [r.uid for r in self.slots if r is not None]
+
     # ------------------------------------------- chunked-prefill states --
     def begin_prefill(self, slot: int) -> None:
         """Mark an admitted slot as mid-prefill (occupied, not decoding)."""

@@ -171,6 +171,10 @@ class SpecDecoder:
                                if ecfg.prefill_chunk else None)
         self.n_draft_steps = 0
         self.n_suspended_steps = 0
+        # wall of the most recent draft pass — the flight recorder's
+        # per-step draft_s field (always tracked: two clock reads per
+        # pass, unlike the tracer/registry views this has no off switch)
+        self.last_draft_s = 0.0
         if self._mx is not None:
             self._mx["suspended"] = registry.counter(
                 "spec_suspended_steps",
@@ -244,7 +248,7 @@ class SpecDecoder:
         tr = self.tracer
         mx = self._mx
         t_span = tr.begin() if tr else 0.0
-        t_pass = time.perf_counter() if mx else 0.0
+        t_pass = time.perf_counter()
         dispatch_s = wait_s = 0.0
         n_iter = int(steps.max())
         for j in range(n_iter):
@@ -264,9 +268,10 @@ class SpecDecoder:
             adv = (j + 1) < steps
             cur_tok = np.where(adv, toks, cur_tok).astype(np.int32)
             cur_pos = np.where(adv, cur_pos + 1, cur_pos).astype(np.int32)
+        self.last_draft_s = time.perf_counter() - t_pass
         if mx:
             mx["steps"].inc(n_iter)
-            mx["draft_s"].observe(time.perf_counter() - t_pass)
+            mx["draft_s"].observe(self.last_draft_s)
         if tr:
             tr.span_end("draft", t_span, iters=n_iter,
                         dispatch_s=dispatch_s, wait_s=wait_s)

@@ -277,6 +277,17 @@ def main():
                     help="disable the always-on metrics registry (the "
                          "overhead-measurement configuration; metrics "
                          "are otherwise cheap enough to never turn off)")
+    ap.add_argument("--incident-dir", default=None, metavar="DIR",
+                    help="arm the anomaly-detector sweep and write "
+                         "incident bundles (flight window + metrics + "
+                         "journal tail + fingerprint + request docs) "
+                         "under DIR on trigger; inspect with "
+                         "repro.launch.incident_report")
+    ap.add_argument("--incident-cooldown", type=int, default=50,
+                    metavar="N",
+                    help="steps between detector refires / bundles "
+                         "(default 50) — a fault storm yields one "
+                         "incident, not one per step")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights before quantizing")
     ap.add_argument("--recipe", default=None,
@@ -382,6 +393,10 @@ def main():
             "--journal/--snapshot/--recover-from/--supervise/"
             "--verify-recovery are engine features — the wave loop has "
             "no journal, snapshot, or recovery path; drop --wave")
+    if args.wave and args.incident_dir:
+        raise NotImplementedError(
+            "--incident-dir is an engine feature — the wave loop has no "
+            "flight recorder or anomaly detectors; drop --wave")
     if args.snapshot_every and not args.snapshot:
         raise ValueError(
             "--snapshot-every without --snapshot DIR has nowhere to "
@@ -460,7 +475,9 @@ def main():
             degrade=args.degrade, fault_spec=faults,
             journal_path=args.journal, journal_resume=resume,
             snapshot_path=args.snapshot,
-            snapshot_every=args.snapshot_every),
+            snapshot_every=args.snapshot_every,
+            incident_dir=args.incident_dir,
+            incident_cooldown=args.incident_cooldown),
             kv_scales=kv_scales, registry=registry)
 
     # --recover-from is a fresh-process restart: the journal already
@@ -513,6 +530,11 @@ def main():
                   f"{restarts}/{args.supervise}, recovering from "
                   f"{'snapshot+journal' if args.snapshot else 'journal'}",
                   flush=True)
+            if args.incident_dir:
+                # capture from the CRASHED engine, whose flight window
+                # and scheduler state describe the death — the rebuilt
+                # engine starts with an empty ring
+                eng.dump_incident("injected_crash", reason=str(exc))
             # crash injector disarmed on restart: a fresh injector with
             # the same seed would re-crash at the same step boundary,
             # turning every supervised run into a restart-budget exhaust
@@ -629,6 +651,18 @@ def main():
                   f"step wall; dispatch {pa['dispatch_frac']:.0%} / "
                   f"device wait {pa['device_wait_frac']:.0%} of "
                   f"attributed time")
+    if args.incident_dir:
+        # count on disk, not eng.incidents: supervised restarts replace
+        # the engine object but the bundles persist
+        bundles = sorted(
+            d for d in (os.listdir(args.incident_dir)
+                        if os.path.isdir(args.incident_dir) else [])
+            if d.startswith("incident-"))
+        print(f"incidents: {len(bundles)} bundle(s) -> "
+              f"{args.incident_dir}"
+              + (f"; inspect with python -m repro.launch.incident_report "
+                 f"{os.path.join(args.incident_dir, bundles[0])}"
+                 if bundles else " (no anomalies)"))
     if args.metrics_snapshot:
         print(f"metrics: {writer.seq} snapshots -> "
               f"{args.metrics_snapshot}")

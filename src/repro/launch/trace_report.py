@@ -106,15 +106,46 @@ def print_lifecycle(records: list) -> None:
               f"p50 {_fmt_ms(d['p50'])} ms   p95 {_fmt_ms(d['p95'])} ms")
 
 
+#: How to regenerate an HLO text dump for --hlo (the post-SPMD
+#: per-device module text `hlo_analysis.analyze` expects).
+_HLO_REGEN = (
+    "XLA_FLAGS=--xla_dump_to=/tmp/hlo_dump PYTHONPATH=src \\\n"
+    "    python -m repro.launch.serve --arch stablelm-1.6b --reduced "
+    "--requests 4\n"
+    "  then pass a post-optimization module, e.g.\n"
+    "  /tmp/hlo_dump/module_*jit__decode*after_optimizations.txt")
+
+
 def hlo_crosscheck(pb: dict, hlo_path: str, phase: str) -> None:
     """Marry the trace's measured per-dispatch device wait for ``phase``
     to the executable's static roofline terms: implied HBM bandwidth and
     MXU throughput, the sanity check that the phase's wait is device
-    compute and not something pathological."""
+    compute and not something pathological.
+
+    Missing or corrupt HLO input fails LOUDLY with the exact regen
+    command (the ``--max-queue auto`` precedent): a silent zero-term
+    cross-check reads as "the device is infinitely fast", which is worse
+    than no cross-check."""
     from repro.launch.hlo_analysis import analyze
 
-    with open(hlo_path) as f:
-        terms = analyze(f.read())
+    try:
+        with open(hlo_path) as f:
+            text = f.read()
+    except OSError as e:
+        raise SystemExit(
+            f"--hlo: cannot read {hlo_path} ({e}) — dump the "
+            f"executable's HLO first:\n  {_HLO_REGEN}")
+    try:
+        terms = analyze(text)
+    except Exception as e:
+        raise SystemExit(
+            f"--hlo: {hlo_path} does not parse as HLO module text "
+            f"({e}) — regenerate the dump:\n  {_HLO_REGEN}")
+    if not terms.get("dot_flops") and not terms.get("dot_bytes"):
+        raise SystemExit(
+            f"--hlo: {hlo_path} parsed but holds no dot ops — corrupt "
+            f"or not a post-optimization module dump. Regenerate:\n"
+            f"  {_HLO_REGEN}")
     d = pb["phases"].get(phase)
     if d is None or not d["count"]:
         print(f"\nhlo cross-check: no {phase!r} spans in trace")

@@ -8,8 +8,15 @@ percentile-with-empty-guard math every metrics consumer reuses;
 `quality` holds the quantization-quality counters; `metrics` is the
 always-on registry (counters/gauges/histograms, Prometheus + JSONL
 snapshot export, DESIGN.md §11) and `provenance` the shared artifact
-header.
+header. `flight` is the always-on bounded per-step flight recorder and
+incident-bundle writer, `detect` the anomaly-detector catalog that
+triggers bundles, and `atomic` the shared tmp+fsync+rename protocol
+every exporter writes through (DESIGN.md §14).
 """
+from repro.obs.atomic import atomic_dir, atomic_write_text
+from repro.obs.detect import DETECTORS, AnomalyDetector, Firing
+from repro.obs.flight import (FlightRecorder, load_incident_bundle,
+                              tail_lines, write_incident_bundle)
 from repro.obs.metrics import (DEPTH_BUCKETS, LATENCY_BUCKETS_S, Counter,
                                Gauge, Histogram, MetricsRegistry,
                                RegistryQuantProbe, SnapshotWriter,
@@ -34,4 +41,7 @@ __all__ = [
     "SnapshotWriter", "RegistryQuantProbe", "default_registry",
     "load_snapshots", "LATENCY_BUCKETS_S", "DEPTH_BUCKETS",
     "provenance",
+    "atomic_write_text", "atomic_dir",
+    "FlightRecorder", "write_incident_bundle", "load_incident_bundle",
+    "tail_lines", "AnomalyDetector", "Firing", "DETECTORS",
 ]

@@ -36,6 +36,8 @@ import math
 import time
 from typing import Optional, Sequence
 
+from repro.obs.atomic import atomic_write_text
+
 #: Default histogram buckets for latency-in-seconds instruments:
 #: log-spaced from 100 µs to 10 s (engine steps on the dev box sit
 #: around 1–10 ms; TTFT under load reaches seconds). Upper bounds;
@@ -305,6 +307,13 @@ class SnapshotWriter:
     line is ``{"kind": "snapshot", "seq", "ts", "metrics": ...}``.
     ``maybe_write`` is rate-limited by ``interval_s`` so the serve loop
     can call it every step; ``write`` forces one (the final flush).
+
+    Snapshot lines are buffered and the whole file is rewritten through
+    the atomic tmp+fsync+rename helper on every (rate-limited) write —
+    a crash mid-write leaves the previous complete log, never a
+    torn tail. The buffer is bounded by the ring of snapshots a serve
+    run produces (one per ``interval_s``), the same order of magnitude
+    the log itself occupies on disk.
     """
 
     def __init__(self, path: str, registry: MetricsRegistry,
@@ -320,17 +329,21 @@ class SnapshotWriter:
         if provenance is None:
             from repro.obs.provenance import provenance as _prov
             provenance = _prov()
-        with open(path, "w") as f:
-            f.write(json.dumps({"kind": "header", "schema": 1,
-                                "provenance": provenance}) + "\n")
+        self._lines = [json.dumps({"kind": "header", "schema": 1,
+                                   "provenance": provenance})]
+        self._flush()
+
+    def _flush(self) -> None:
+        atomic_write_text(self.path, "\n".join(self._lines) + "\n")
 
     def write(self) -> int:
-        """Append one snapshot now; returns its seq number."""
+        """Append one snapshot now (atomic whole-file rewrite); returns
+        its seq number."""
         rec = {"kind": "snapshot", "seq": self.seq,
                "ts": self.clock() - self.t0,
                "metrics": self.registry.snapshot()}
-        with open(self.path, "a") as f:
-            f.write(json.dumps(rec, default=float) + "\n")
+        self._lines.append(json.dumps(rec, default=float))
+        self._flush()
         self._last = self.clock()
         self.seq += 1
         return rec["seq"]

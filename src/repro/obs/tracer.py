@@ -34,11 +34,16 @@ import contextlib
 import json
 import time
 
+from repro.obs.atomic import atomic_write_text
+
 SCHEMA_VERSION = 1
 
 #: Chrome-trace thread ids: slots get 1 + slot, un-slotted lifecycle
 #: events a "requests" track, un-slotted phase spans one track per phase
 #: name (stable order from schema.PHASES), counters their own track.
+#: These are *minimum* tids — `chrome_trace` shifts them above the
+#: highest slot tid, so engines with >= 59 slots don't alias the slot
+#: tracks onto the requests/counters/phase tracks.
 _TID_REQUESTS = 60
 _TID_COUNTERS = 61
 _TID_PHASE0 = 64
@@ -125,18 +130,16 @@ class Tracer:
         yield from self.events
 
     def to_jsonl(self, path: str) -> int:
-        """Write the JSONL event log; returns the record count
-        (header included)."""
-        n = 0
-        with open(path, "w") as f:
-            for rec in self.records():
-                f.write(json.dumps(rec, default=float) + "\n")
-                n += 1
-        return n
+        """Write the JSONL event log atomically (tmp + fsync + rename —
+        a crash mid-export never truncates the artifact); returns the
+        record count (header included)."""
+        lines = [json.dumps(rec, default=float) for rec in self.records()]
+        atomic_write_text(path, "\n".join(lines) + "\n" if lines else "")
+        return len(lines)
 
     def to_chrome(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(chrome_trace(list(self.records())), f)
+        atomic_write_text(
+            path, json.dumps(chrome_trace(list(self.records()))))
 
 
 def load_jsonl(path: str) -> list[dict]:
@@ -145,39 +148,51 @@ def load_jsonl(path: str) -> list[dict]:
         return [json.loads(line) for line in f if line.strip()]
 
 
-def _chrome_tid(rec: dict, phase_tids: dict) -> int:
+def _chrome_tid(rec: dict, phase_tids: dict, tid_requests: int,
+                tid_phase0: int) -> int:
     if rec.get("slot") is not None:
         return 1 + int(rec["slot"])
     if rec["kind"] == "span":
         return phase_tids.setdefault(rec["name"],
-                                     _TID_PHASE0 + len(phase_tids))
-    return _TID_REQUESTS
+                                     tid_phase0 + len(phase_tids))
+    return tid_requests
 
 
 def chrome_trace(records: list[dict]) -> dict:
     """Chrome trace-event JSON (Perfetto-loadable) from trace records:
     one track per slot (slot-attributed spans + lifecycle instants), one
-    track per un-slotted engine phase, one counter track. Times in µs."""
+    track per un-slotted engine phase, one counter track. Times in µs.
+
+    Slot tids are ``1 + slot``, so the fixed requests/counters/phase
+    tids would alias slot tracks at >= 59 slots; the non-slot tids are
+    therefore shifted above the highest slot seen in ``records``."""
+    max_slot = -1
+    for rec in records:
+        if (rec.get("kind") in ("span", "event", "counter")
+                and rec.get("slot") is not None):
+            max_slot = max(max_slot, int(rec["slot"]))
+    tid_requests = max(_TID_REQUESTS, max_slot + 2)
+    tid_counters = tid_requests + (_TID_COUNTERS - _TID_REQUESTS)
+    tid_phase0 = tid_requests + (_TID_PHASE0 - _TID_REQUESTS)
     out = []
     phase_tids: dict[str, int] = {}
-    max_slot = -1
     for rec in records:
         kind = rec.get("kind")
         if kind not in ("span", "event", "counter"):
             continue
         ts_us = rec["ts"] * 1e6
-        if rec.get("slot") is not None:
-            max_slot = max(max_slot, int(rec["slot"]))
         args = {k: v for k, v in rec.items()
                 if k not in ("kind", "name", "ts", "dur", "value")}
         if kind == "span":
             out.append({"ph": "X", "pid": 0,
-                        "tid": _chrome_tid(rec, phase_tids),
+                        "tid": _chrome_tid(rec, phase_tids, tid_requests,
+                                           tid_phase0),
                         "name": rec["name"], "ts": ts_us,
                         "dur": rec["dur"] * 1e6, "args": args})
         elif kind == "event":
             out.append({"ph": "i", "s": "t", "pid": 0,
-                        "tid": _chrome_tid(rec, phase_tids),
+                        "tid": _chrome_tid(rec, phase_tids, tid_requests,
+                                           tid_phase0),
                         "name": rec["name"], "ts": ts_us, "args": args})
         else:                                   # counter
             val = rec.get("value")
@@ -185,11 +200,11 @@ def chrome_trace(records: list[dict]) -> dict:
             series = {k: v for k, v in series.items()
                       if isinstance(v, (int, float))}
             if series:
-                out.append({"ph": "C", "pid": 0, "tid": _TID_COUNTERS,
+                out.append({"ph": "C", "pid": 0, "tid": tid_counters,
                             "name": rec["name"], "ts": ts_us,
                             "args": series})
     names = [(1 + s, f"slot {s}") for s in range(max_slot + 1)]
-    names += [(_TID_REQUESTS, "requests"), (_TID_COUNTERS, "counters")]
+    names += [(tid_requests, "requests"), (tid_counters, "counters")]
     names += [(tid, f"phase:{name}") for name, tid in phase_tids.items()]
     meta = [{"ph": "M", "pid": 0, "tid": tid, "name": "thread_name",
              "args": {"name": label}} for tid, label in names]

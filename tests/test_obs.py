@@ -102,6 +102,66 @@ def test_chrome_trace_tracks():
     assert {"slot 2", "requests", "counters", "phase:draft"} <= names
 
 
+def test_tracer_ring_wraparound_mixed_kinds(tmp_path):
+    """Wraparound with spans, events, and counters interleaved: the ring
+    drops the OLDEST records regardless of kind, the header counts them,
+    and both exporters stay consistent on the surviving window."""
+    tr = Tracer(capacity=6, clock=FakeClock())
+    for i in range(4):                         # 12 records, 6 survive
+        tr.span_end("decode", tr.begin(), slot=i % 2, step=i)
+        tr.event("submit", uid=i)
+        tr.counter("kv_quality", {"k_clip_frac": i / 10})
+    assert len(tr.events) == 6 and tr.dropped == 6
+    # survivors are the two newest span/event/counter triples, in order
+    assert [r["kind"] for r in tr.events] \
+        == ["span", "event", "counter"] * 2
+    assert [r["uid"] for r in tr.events if r["kind"] == "event"] == [2, 3]
+    assert tr.header()["dropped"] == 6
+    path = str(tmp_path / "wrap.jsonl")
+    assert tr.to_jsonl(path) == 7              # header + 6
+    records = load_jsonl(path)
+    assert records[0]["dropped"] == 6
+    assert validate_events(records) == []
+    ct = chrome_trace(records)
+    evs = ct["traceEvents"]
+    assert sum(e["ph"] == "X" for e in evs) == 2
+    assert sum(e["ph"] == "i" for e in evs) == 2
+    assert sum(e["ph"] == "C" for e in evs) == 2
+
+
+def test_chrome_trace_tid_shift_above_wide_slot_range():
+    """Slot tids are 1 + slot, so slots >= 59 would land on the fixed
+    requests/counters/phase tids — chrome_trace must shift the non-slot
+    tracks above the widest slot instead of aliasing them."""
+    tr = Tracer(clock=FakeClock())
+    tr.span_end("decode", tr.begin(), slot=59)     # 1+59 == legacy requests
+    tr.span_end("decode", tr.begin(), slot=70)     # past legacy phase tids
+    tr.span_end("draft", tr.begin())               # un-slotted phase track
+    tr.event("submit", uid=0)                      # requests track
+    tr.counter("kv_quality", {"k_clip_frac": 0.1})
+    ct = chrome_trace(list(tr.records()))
+    evs = ct["traceEvents"]
+    slot_tids = {e["tid"] for e in evs
+                 if e["ph"] == "X" and e["args"].get("slot") is not None}
+    assert slot_tids == {60, 71}
+    req_tid = next(e["tid"] for e in evs if e["ph"] == "i")
+    ctr_tid = next(e["tid"] for e in evs if e["ph"] == "C")
+    phase_tid = next(e["tid"] for e in evs
+                     if e["ph"] == "X" and "slot" not in e["args"])
+    assert req_tid > 71 and len({req_tid, ctr_tid, phase_tid}) == 3
+    assert not slot_tids & {req_tid, ctr_tid, phase_tid}
+    # thread_name metadata is one label per tid, no duplicates
+    names = {}
+    for e in evs:
+        if e["ph"] == "M" and e["name"] == "thread_name":
+            assert e["tid"] not in names, "duplicate thread_name tid"
+            names[e["tid"]] = e["args"]["name"]
+    assert names[60] == "slot 59" and names[71] == "slot 70"
+    assert names[req_tid] == "requests"
+    assert names[ctr_tid] == "counters"
+    assert names[phase_tid] == "phase:draft"
+
+
 # --------------------------------------------------------------- schema ---
 def _valid_records():
     return [
